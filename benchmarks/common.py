@@ -1,0 +1,43 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0
+
+
+def run_all_schemes(instance, schemes=None, lp_solution=None):
+    """Run OURS + baselines sharing one LP solve; returns {scheme: result}."""
+    from repro.core import lp, scheduler
+
+    schemes = schemes or ["ours", "wspt_order", "load_only", "sunflow_s", "bvn_s"]
+    sol = lp_solution or lp.solve_exact(instance)
+    return {s: scheduler.run(instance, s, lp_solution=sol) for s in schemes}, sol
+
+
+def normw(results, base="ours"):
+    b = results[base].total_weighted_cct
+    return {s: r.total_weighted_cct / b for s, r in results.items()}
+
+
+def quantile_cct(result, q):
+    return float(np.quantile(result.ccts, q))

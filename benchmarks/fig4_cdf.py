@@ -1,0 +1,51 @@
+"""Paper Fig. 4: CDF of normalized total weighted CCT across random
+instances for K=3,4,5, imbalanced and balanced core rates."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import normw, run_all_schemes, save_json
+from repro.traffic.instances import sample_instance
+
+RATES = {
+    3: {"imbalanced": (10.0, 20.0, 30.0), "balanced": (20.0, 20.0, 20.0)},
+    4: {
+        "imbalanced": (5.0, 10.0, 20.0, 25.0),
+        "balanced": (15.0, 15.0, 15.0, 15.0),
+    },
+    5: {
+        "imbalanced": (5.0, 5.0, 10.0, 15.0, 25.0),
+        "balanced": (12.0, 12.0, 12.0, 12.0, 12.0),
+    },
+}
+
+
+def run(num_instances=10, quick=False):
+    n = 3 if quick else num_instances
+    out = {}
+    for K, settings in RATES.items():
+        for kind, rates in settings.items():
+            dist = {s: [] for s in ["wspt_order", "load_only", "sunflow_s", "bvn_s"]}
+            for seed in range(n):
+                inst = sample_instance(rates=rates, seed=seed)
+                results, _ = run_all_schemes(inst)
+                nw = normw(results)
+                for s in dist:
+                    dist[s].append(nw[s])
+            out[f"K{K}_{kind}"] = {s: sorted(v) for s, v in dist.items()}
+    save_json("fig4_cdf", out)
+    return out
+
+
+def main(quick=False):
+    out = run(quick=quick)
+    print("fig4_cdf: setting,scheme,median_normW,max_normW")
+    for setting, dist in out.items():
+        for s, v in dist.items():
+            print(f"fig4,{setting},{s},{np.median(v):.4f},{max(v):.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

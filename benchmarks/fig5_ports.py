@@ -1,0 +1,49 @@
+"""Paper Fig. 5: normalized total weighted CCT vs number of ports
+N in {8,12,16,24,32} for K=3,4,5 (M=100, delta=8)."""
+
+from __future__ import annotations
+
+from benchmarks.common import normw, run_all_schemes, save_json
+from benchmarks.fig4_cdf import RATES
+from repro.traffic.instances import sample_instance
+
+PORTS = (8, 12, 16, 24, 32)
+
+
+def run(quick=False):
+    ports = PORTS[::2] if quick else PORTS
+    ks = [3] if quick else [3, 4, 5]
+    rows = []
+    for K in ks:
+        rates = RATES[K]["imbalanced"]
+        for N in ports:
+            inst = sample_instance(num_ports=N, rates=rates, seed=0)
+            results, _ = run_all_schemes(inst)
+            nw = normw(results)
+            rows.append(
+                {
+                    "K": K,
+                    "N": N,
+                    "WSPT": nw["wspt_order"],
+                    "LOAD": nw["load_only"],
+                    "SUN": nw["sunflow_s"],
+                    "BvN": nw["bvn_s"],
+                }
+            )
+    save_json("fig5_ports", rows)
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    print("fig5: K,N,WSPT,LOAD,SUN,BvN")
+    for r in rows:
+        print(
+            f"fig5,{r['K']},{r['N']},{r['WSPT']:.4f},{r['LOAD']:.4f},"
+            f"{r['SUN']:.4f},{r['BvN']:.4f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

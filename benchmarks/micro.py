@@ -1,0 +1,79 @@
+"""Micro-benchmarks: scheduler stages, LP solvers, Pallas kernel oracles."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import lp
+from repro.core.allocation import allocate
+from repro.core.ordering import wspt_order
+from repro.core.scheduler import run as run_scheme
+from repro.traffic.instances import paper_default_instance
+
+
+def _time(fn, reps=3):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(quick=False):
+    rows = []
+    inst = paper_default_instance(seed=0)
+    sol = lp.solve_exact(inst)
+
+    rows.append(("lp_exact_M100", _time(lambda: lp.solve_exact(inst), 1)))
+    rows.append(
+        ("lp_subgradient_M100", _time(lambda: lp.solve_subgradient(inst), 1))
+    )
+    order = wspt_order(inst)
+    rows.append(("allocation_M100", _time(lambda: allocate(inst, order))))
+    rows.append(
+        (
+            "full_ours_M100",
+            _time(lambda: run_scheme(inst, "ours", lp_solution=sol), 1),
+        )
+    )
+
+    # Kernel oracles (interpret mode on CPU).
+    from repro.kernels.lp_terms import lp_terms
+    from repro.kernels.port_stats import port_stats
+
+    d = jnp.asarray(inst.demands, jnp.float32)
+    rows.append(
+        ("port_stats_kernel", _time(lambda: jax.block_until_ready(port_stats(d))))
+    )
+    M = inst.num_coflows
+    X = jnp.eye(M, dtype=jnp.float32)
+    rho = jnp.asarray(inst.port_stats()[0], jnp.float32)
+    rows.append(
+        (
+            "lp_terms_kernel",
+            _time(
+                lambda: jax.block_until_ready(
+                    lp_terms(X, rho, rho, 1 / 60.0, 8 / 3.0)
+                )
+            ),
+        )
+    )
+    save_json("micro", dict(rows))
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    print("micro: name,us_per_call")
+    for name, us in rows:
+        print(f"micro,{name},{us:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark runner: one module per paper table/figure + framework benches.
+
+Prints CSV rows (``<bench>,<fields...>``) and saves JSON into
+results/benchmarks/.  ``--quick`` shrinks sweeps for CI-speed runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset: fig3,fig4,table3,fig5,fig6,eps,micro,planner",
+    )
+    args = ap.parse_args(argv)
+
+    from benchmarks import (
+        eps_variant,
+        fig3_default,
+        fig4_cdf,
+        fig5_ports,
+        fig6_ratio,
+        localsearch_gain,
+        micro,
+        planner_gain,
+        table3_delta,
+    )
+
+    benches = {
+        "fig3": fig3_default.main,
+        "fig4": fig4_cdf.main,
+        "table3": table3_delta.main,
+        "fig5": fig5_ports.main,
+        "fig6": fig6_ratio.main,
+        "eps": eps_variant.main,
+        "micro": micro.main,
+        "planner": planner_gain.main,
+        "localsearch": localsearch_gain.main,
+    }
+    chosen = (
+        {k: benches[k] for k in args.only.split(",")} if args.only else benches
+    )
+    t0 = time.perf_counter()
+    for name, fn in chosen.items():
+        print(f"### {name}", flush=True)
+        t = time.perf_counter()
+        fn(quick=args.quick)
+        print(f"### {name} done in {time.perf_counter()-t:.1f}s\n", flush=True)
+    print(f"all benchmarks done in {time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Table III: normalized total weighted CCT vs reconfiguration delay
+delta in {2,4,6,8,10,12} for K=3,4,5, imbalanced + balanced rates."""
+
+from __future__ import annotations
+
+from benchmarks.common import normw, run_all_schemes, save_json
+from benchmarks.fig4_cdf import RATES
+from repro.traffic.instances import sample_instance
+
+DELTAS = (2.0, 4.0, 6.0, 8.0, 10.0, 12.0)
+
+
+def run(quick=False):
+    deltas = DELTAS[1::3] if quick else DELTAS
+    ks = [3] if quick else [3, 4, 5]
+    rows = []
+    for K in ks:
+        for kind, rates in RATES[K].items():
+            for delta in deltas:
+                inst = sample_instance(rates=rates, delta=delta, seed=0)
+                results, _ = run_all_schemes(inst)
+                nw = normw(results)
+                rows.append(
+                    {
+                        "K": K,
+                        "rates": kind,
+                        "delta": delta,
+                        "WSPT": nw["wspt_order"],
+                        "LOAD": nw["load_only"],
+                        "SUN": nw["sunflow_s"],
+                        "BvN": nw["bvn_s"],
+                    }
+                )
+    save_json("table3_delta", rows)
+    return rows
+
+
+def main(quick=False):
+    rows = run(quick=quick)
+    print("table3: K,rates,delta,WSPT,LOAD,SUN,BvN")
+    for r in rows:
+        print(
+            f"table3,{r['K']},{r['rates']},{r['delta']:.0f},"
+            f"{r['WSPT']:.4f},{r['LOAD']:.4f},{r['SUN']:.4f},{r['BvN']:.4f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

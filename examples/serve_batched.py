@@ -1,0 +1,22 @@
+"""Batched serving example: wave-based batched decode over a request queue.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    serve_mod.main(
+        [
+            "--arch", "gemma3-1b",
+            "--slots", "4",
+            "--requests", "12",
+            "--prompt-len", "16",
+            "--max-new", "24",
+        ]
+    )
+
+
+if __name__ == "__main__":
+    main()

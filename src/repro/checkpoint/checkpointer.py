@@ -1,0 +1,126 @@
+"""Fault-tolerant checkpointing: atomic, async, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json, written to a temp dir
+and atomically renamed (a crash mid-write never corrupts the latest
+checkpoint).  Saves run on a background thread (training continues), and a
+bounded history is retained.  Restore re-shards to ANY mesh: arrays are
+loaded on host and device_put with the target shardings — this is the
+elastic-rescale path (launch/train.py uses it after simulated node loss).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "latest_step"]
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = leaf
+    return out, treedef
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- saving
+    def save(self, step: int, state: dict, block: bool = False):
+        """Snapshot `state` (pytree of arrays) at `step`."""
+        # Pull to host *before* handing to the writer thread so training can
+        # mutate/donate device buffers immediately.
+        flat, _ = _flatten(state)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+        if self.async_save and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: dict):
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(host.keys()),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # ------------------------------------------------------------ restore
+    def restore(self, step: int, like, shardings=None):
+        """Restore into the structure of `like` (pytree of arrays or
+        ShapeDtypeStructs).  `shardings` (same structure) re-shards onto the
+        *current* mesh — restoring a 16-host checkpoint onto 12 hosts is
+        just a different shardings tree (elastic restore)."""
+        path = os.path.join(self.dir, f"step_{step}", "arrays.npz")
+        data = np.load(path)
+        flat_like, treedef = _flatten(like)
+        missing = set(flat_like) - set(data.files)
+        if missing:
+            raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}")
+        if shardings is not None:
+            flat_sh, _ = _flatten(shardings)
+        out = {}
+        for k, ref in flat_like.items():
+            arr = data[k]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"{k}: checkpoint shape {arr.shape} != expected {ref.shape}"
+                )
+            arr = arr.astype(ref.dtype)
+            if shardings is not None:
+                out[k] = jax.device_put(arr, flat_sh[k])
+            else:
+                out[k] = jax.numpy.asarray(arr)
+        leaves = [out[k] for k in flat_like]
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,55 @@
+"""Architecture registry: --arch <id> -> exact public config."""
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.configs import (
+    dbrx_132b,
+    gemma3_1b,
+    llama_3_2_vision_11b,
+    minicpm3_4b,
+    musicgen_medium,
+    phi3_medium_14b,
+    qwen3_moe_235b_a22b,
+    recurrentgemma_2b,
+    stablelm_1_6b,
+    xlstm_1_3b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        musicgen_medium,
+        stablelm_1_6b,
+        phi3_medium_14b,
+        gemma3_1b,
+        minicpm3_4b,
+        dbrx_132b,
+        qwen3_moe_235b_a22b,
+        xlstm_1_3b,
+        llama_3_2_vision_11b,
+        recurrentgemma_2b,
+    )
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    """Shapes this arch runs; long_500k only for sub-quadratic archs."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        out.append("long_500k")
+    return out
+
+
+__all__ = [
+    "ARCHS",
+    "get_arch",
+    "applicable_shapes",
+    "SHAPES",
+    "ShapeSpec",
+    "ModelConfig",
+]

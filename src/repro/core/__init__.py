@@ -1,0 +1,36 @@
+"""Core library: multi-coflow scheduling in K-core OCS networks.
+
+Implements the paper's Algorithm 1 (LP-guided ordering, prefix-aware greedy
+inter-core allocation, not-all-stop intra-core circuit scheduling), the
+ablation baselines, the EPS variant, and per-instance certificates of the
+(8K+1)-approximation analysis.
+"""
+
+from repro.core.coflow import CoflowInstance, port_stats, flow_table
+from repro.core.lp import solve_exact, solve_subgradient, LPSolution
+from repro.core.ordering import lp_guided_order, wspt_order
+from repro.core.allocation import allocate, Allocation
+from repro.core.circuit import schedule_core, CoreSchedule
+from repro.core.scheduler import run, ScheduleResult, total_weighted_cct, tail_cct
+from repro.core.theory import certify, CertificateReport
+
+__all__ = [
+    "CoflowInstance",
+    "port_stats",
+    "flow_table",
+    "solve_exact",
+    "solve_subgradient",
+    "LPSolution",
+    "lp_guided_order",
+    "wspt_order",
+    "allocate",
+    "Allocation",
+    "schedule_core",
+    "CoreSchedule",
+    "run",
+    "ScheduleResult",
+    "total_weighted_cct",
+    "tail_cct",
+    "certify",
+    "CertificateReport",
+]

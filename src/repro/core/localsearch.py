@@ -1,0 +1,68 @@
+"""Beyond-paper: local-search refinement of the LP-guided order.
+
+The LP order minimizes a *relaxation*; the realized schedule's weighted CCT
+is piecewise-constant in the order, so cheap pairwise-swap hill climbing on
+the TRUE objective (re-running allocation + circuit scheduling per
+candidate) squeezes out the rounding slack.  The guarantee is preserved
+for free: we only accept swaps that improve the realized objective, so the
+result is never worse than Algorithm 1's schedule and the (8K+1) bound
+still applies to it.
+
+Neighborhood: adjacent transpositions, first-improvement sweeps, bounded
+rounds.  Cost per evaluation is one full allocation+scheduling pass
+(O(F·K + F log F + events)); M=100 paper instances evaluate in ~25 ms.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.allocation import allocate
+from repro.core.coflow import CoflowInstance
+from repro.core.scheduler import _schedule_all_cores, total_weighted_cct
+from repro.core.validate import ccts_from_schedules
+
+__all__ = ["refine_order", "evaluate_order"]
+
+
+def evaluate_order(
+    instance: CoflowInstance, order: np.ndarray, discipline: str = "greedy"
+) -> float:
+    alloc = allocate(instance, order)
+    schedules = _schedule_all_cores(
+        instance, alloc, order, discipline=discipline
+    )
+    ccts = ccts_from_schedules(instance.num_coflows, schedules)
+    return total_weighted_cct(instance, ccts)
+
+
+def refine_order(
+    instance: CoflowInstance,
+    order: np.ndarray,
+    max_rounds: int = 4,
+    discipline: str = "greedy",
+    verbose: bool = False,
+):
+    """First-improvement adjacent-swap hill climbing on the true objective.
+
+    Returns (refined_order, best_objective, evaluations).
+    """
+    order = np.asarray(order).copy()
+    best = evaluate_order(instance, order, discipline)
+    evals = 1
+    M = len(order)
+    for rnd in range(max_rounds):
+        improved = False
+        for i in range(M - 1):
+            cand = order.copy()
+            cand[i], cand[i + 1] = cand[i + 1], cand[i]
+            obj = evaluate_order(instance, cand, discipline)
+            evals += 1
+            if obj < best - 1e-9:
+                order, best = cand, obj
+                improved = True
+        if verbose:
+            print(f"  localsearch round {rnd}: best={best:.1f}")
+        if not improved:
+            break
+    return order, best, evals

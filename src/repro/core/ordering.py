@@ -1,0 +1,38 @@
+"""Global coflow ordering policies (Algorithm 1 stage 1 + baselines)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.coflow import CoflowInstance
+from repro.core import lp as lp_mod
+
+__all__ = ["lp_guided_order", "wspt_order", "fifo_order"]
+
+
+def lp_guided_order(
+    instance: CoflowInstance, method: str = "exact", **kwargs
+) -> tuple[np.ndarray, lp_mod.LPSolution]:
+    """LP-guided order: solve the ordering LP, sort by non-decreasing T~_m."""
+    if method == "exact":
+        sol = lp_mod.solve_exact(instance)
+    elif method == "subgradient":
+        sol = lp_mod.solve_subgradient(instance, **kwargs)
+    else:
+        raise ValueError(f"unknown LP method {method!r}")
+    return sol.order(), sol
+
+
+def wspt_order(instance: CoflowInstance) -> np.ndarray:
+    """WSPT-ORDER baseline [31]: non-increasing w_m / T_LB(D_m).
+
+    T_LB(D_m) = delta + rho_m / R is the allocation-independent single-coflow
+    lower bound (paper Sec. V-B).
+    """
+    score = instance.weights / np.maximum(instance.global_lower_bound(), 1e-300)
+    return np.argsort(-score, kind="stable")
+
+
+def fifo_order(instance: CoflowInstance) -> np.ndarray:
+    """Release-time FIFO (ties by index) — ablation reference."""
+    return np.argsort(instance.releases, kind="stable")

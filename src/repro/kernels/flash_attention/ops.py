@@ -1,0 +1,55 @@
+"""Public flash-attention op: Pallas forward, reference-recompute backward.
+
+The Pallas kernel implements the forward pass (the serving hot path and the
+dominant training FLOPs).  For training, the backward recomputes attention
+with the jnp oracle under jax.vjp — functionally exact, and on TPU the
+XLA-fused backward is itself flash-style (a dedicated Pallas backward is a
+listed future optimization, not needed for correctness).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention", "attention_ref"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset
+    )
+
+
+def _fwd(q, k, v, causal, window, q_offset):
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset
+    )
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, q_offset, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(
+            q_, k_, v_, causal=causal, window=window, q_offset=q_offset
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the GQA flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Grouped-query attention with optional causal + sliding-window mask.
+
+    q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    ``q_offset`` positions the queries at absolute index q_offset + i (used
+    for decode, where Sq=1 attends over a long cache).
+    window = w keeps keys with  0 <= (q_pos - k_pos) < w  (plus the diagonal).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qi = q_offset + jnp.arange(Sq)[:, None]
+    kj = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Sq, k.shape[2]), dtype=bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jnp.exp(
+        logits - jnp.max(logits, axis=-1, keepdims=True)
+    )
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

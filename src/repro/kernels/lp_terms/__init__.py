@@ -1,0 +1,3 @@
+from repro.kernels.lp_terms.ops import lp_terms, lp_terms_ref
+
+__all__ = ["lp_terms", "lp_terms_ref"]

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper for the lp_terms kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.lp_terms.kernel import lp_terms_pallas
+from repro.kernels.lp_terms.ref import lp_terms_ref
+
+__all__ = ["lp_terms", "lp_terms_ref"]
+
+
+def lp_terms(
+    x: jnp.ndarray,
+    p_rho: jnp.ndarray,
+    p_tau: jnp.ndarray,
+    inv_R: float,
+    delta_over_K: float,
+    use_kernel: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if use_kernel:
+        return lp_terms_pallas(x, p_rho, p_tau, inv_R, delta_over_K)
+    return lp_terms_ref(x, p_rho, p_tau, inv_R, delta_over_K)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the lp_terms kernel.
+
+The ordering-LP objective needs, per coflow m,
+
+  t_load[m] = max_p (X~^T @ P_rho)[m, p] * inv_R
+  t_rec[m]  = max_p (X~^T @ P_tau)[m, p] * delta_over_K
+
+where X~ is the precedence matrix with diag set to 1 (folding the coflow's
+own stats into the matmul; see core/lp.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lp_terms_ref(
+    x: jnp.ndarray,
+    p_rho: jnp.ndarray,
+    p_tau: jnp.ndarray,
+    inv_R: float,
+    delta_over_K: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (M, M) with diag 1; p_rho/p_tau: (M, P). Returns ((M,), (M,))."""
+    xf = x.astype(jnp.float32)
+    load = xf.T @ p_rho.astype(jnp.float32)
+    rec = xf.T @ p_tau.astype(jnp.float32)
+    return load.max(axis=1) * inv_R, rec.max(axis=1) * delta_over_K

@@ -1,0 +1,3 @@
+from repro.kernels.mlstm_chunk.ops import mlstm_chunk, mlstm_ref
+
+__all__ = ["mlstm_chunk", "mlstm_ref"]

@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the fused mLSTM chunk kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_pallas
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+
+__all__ = ["mlstm_chunk", "mlstm_ref"]
+
+
+def mlstm_chunk(q, k, v, log_f, log_i, chunk: int = 256, use_kernel: bool = True):
+    """Fused chunkwise mLSTM; q/k/v (BH, S, Dh), gates (BH, S) in log space."""
+    if use_kernel:
+        return mlstm_chunk_pallas(q, k, v, log_f, log_i, chunk=chunk)
+    return mlstm_ref(q, k, v, log_f, log_i)

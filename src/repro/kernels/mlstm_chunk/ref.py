@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the mLSTM chunk kernel: naive per-step recurrence.
+
+    S_t = f_t * S_{t-1} + i_t * k_t v_t^T
+    n_t = f_t * n_{t-1} + i_t * k_t
+    h_t = (q_t S_t) / max(|q_t . n_t|, 1)
+
+with f_t = sigmoid(f_logit), i_t = exp(clip(i_logit)).  This is the
+independent ground truth both the Pallas kernel AND the model's chunkwise-
+parallel form (models/xlstm.py) are validated against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, log_f, log_i, state=None):
+    """q/k/v: (BH, S, D) f32; log_f/log_i: (BH, S) f32 (already in log
+    space: log_f = log_sigmoid(f_logit), log_i = clipped i_logit).
+    Returns (h (BH, S, D), (S_state (BH, D, D), n (BH, D)))."""
+    BH, S, D = q.shape
+    if state is None:
+        state = (
+            jnp.zeros((BH, D, D), jnp.float32),
+            jnp.zeros((BH, D), jnp.float32),
+        )
+
+    def step(carry, xs):
+        S_prev, n_prev = carry
+        q_t, k_t, v_t, lf_t, li_t = xs
+        f_t = jnp.exp(lf_t)[:, None, None]
+        i_t = jnp.exp(li_t)[:, None, None]
+        S_new = f_t * S_prev + i_t * (k_t[:, :, None] * v_t[:, None, :])
+        n_new = f_t[:, :, 0] * n_prev + i_t[:, :, 0] * k_t
+        num = jnp.einsum("bd,bde->be", q_t, S_new)
+        den = jnp.einsum("bd,bd->b", q_t, n_new)
+        h_t = num / jnp.maximum(jnp.abs(den), 1.0)[:, None]
+        return (S_new, n_new), h_t
+
+    xs = (
+        q.transpose(1, 0, 2),
+        k.transpose(1, 0, 2),
+        v.transpose(1, 0, 2),
+        log_f.transpose(1, 0),
+        log_i.transpose(1, 0),
+    )
+    (S_fin, n_fin), hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2), (S_fin, n_fin)

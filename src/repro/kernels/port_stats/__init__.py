@@ -1,0 +1,3 @@
+from repro.kernels.port_stats.ops import port_stats, port_stats_ref
+
+__all__ = ["port_stats", "port_stats_ref"]

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the port_stats kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.port_stats.kernel import port_stats_pallas
+from repro.kernels.port_stats.ref import port_stats_ref
+
+__all__ = ["port_stats", "port_stats_ref"]
+
+
+def port_stats(
+    demands: jnp.ndarray, use_kernel: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-port (rho, tau) statistics; Pallas kernel or jnp oracle."""
+    if use_kernel:
+        return port_stats_pallas(demands)
+    return port_stats_ref(demands)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the port_stats kernel.
+
+Given demand matrices (M, N, N), produce the per-port statistics the paper's
+scheduler consumes everywhere (Sec. IV-A):
+
+  rho[m, p] — load incident to port p (rows = ingress 0..N-1, cols = egress
+              N..2N-1);
+  tau[m, p] — number of nonzero entries incident to port p.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def port_stats_ref(demands: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """demands: (M, N, N) -> (rho (M, 2N), tau (M, 2N)) in f32."""
+    d = demands.astype(jnp.float32)
+    nz = (d > 0).astype(jnp.float32)
+    rho = jnp.concatenate([d.sum(axis=2), d.sum(axis=1)], axis=-1)
+    tau = jnp.concatenate([nz.sum(axis=2), nz.sum(axis=1)], axis=-1)
+    return rho, tau

@@ -1,0 +1,17 @@
+from repro.kernels.quant.ops import (
+    dequantize,
+    dequantize_flat,
+    dequantize_ref,
+    quantize,
+    quantize_flat,
+    quantize_ref,
+)
+
+__all__ = [
+    "quantize",
+    "dequantize",
+    "quantize_flat",
+    "dequantize_flat",
+    "quantize_ref",
+    "dequantize_ref",
+]

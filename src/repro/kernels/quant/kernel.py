@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: per-row int8 quantize/dequantize (stochastic rounding).
+
+Used by the gradient-compression path (runtime/compression.py): cross-pod
+gradient buckets are quantized to int8 before the inter-pod all-reduce
+(4x fewer bytes on the OCS links the paper schedules) and dequantized after,
+with error feedback applied outside the kernel.
+
+Tiling: rows are independent, so the grid tiles rows with the full row width
+resident in VMEM ((br, C) blocks; the wrapper reshapes flat buckets into
+rows of a fixed chunk size, C = 512 by default).  Row-max, scale, stochastic
+round and clip all fuse into a single VMEM pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, SUBLANE, round_up, use_interpret
+
+
+def _quant_kernel(x_ref, n_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (br, C)
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    y = x / scale[:, None]
+    q = jnp.floor(y + n_ref[...].astype(jnp.float32))
+    q_ref[...] = jnp.clip(q, -127, 127).astype(jnp.int8)
+    s_ref[...] = jnp.broadcast_to(scale[:, None], s_ref.shape)
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def quantize_pallas(
+    x: jnp.ndarray,
+    noise: jnp.ndarray,
+    block_r: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x, noise: (R, C) -> (q int8 (R, C), scale f32 (R,))."""
+    if interpret is None:
+        interpret = use_interpret()
+    R, C = x.shape
+    Rp = round_up(max(R, SUBLANE), block_r)
+    Cp = round_up(C, LANE)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, Rp - R), (0, Cp - C)))
+    np_ = jnp.pad(noise.astype(jnp.float32), ((0, Rp - R), (0, Cp - C)))
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(Rp // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, Cp), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Cp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, Cp), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, Cp), jnp.int8),
+            jax.ShapeDtypeStruct((Rp, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+        name="int8_quantize",
+    )(xp, np_)
+    return q[:R, :C], s[:R, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def dequantize_pallas(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    block_r: int = 64,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = use_interpret()
+    R, C = q.shape
+    Rp = round_up(max(R, SUBLANE), block_r)
+    Cp = round_up(C, LANE)
+    qp = jnp.pad(q, ((0, Rp - R), (0, Cp - C)))
+    sp = jnp.pad(scale.astype(jnp.float32), (0, Rp - R))
+    sp = jnp.broadcast_to(sp[:, None], (Rp, LANE))
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(Rp // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, Cp), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, Cp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Cp), jnp.float32),
+        interpret=interpret,
+        name="int8_dequantize",
+    )(qp, sp)
+    return out[:R, :C]

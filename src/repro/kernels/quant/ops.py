@@ -1,0 +1,53 @@
+"""Public int8 quantize/dequantize ops (flat-vector convenience API)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import round_up
+from repro.kernels.quant.kernel import dequantize_pallas, quantize_pallas
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref
+
+__all__ = [
+    "quantize",
+    "dequantize",
+    "quantize_flat",
+    "dequantize_flat",
+    "quantize_ref",
+    "dequantize_ref",
+]
+
+CHUNK = 512  # per-row quantization group for flat buffers
+
+
+def quantize(x, noise, use_kernel: bool = True):
+    if use_kernel:
+        return quantize_pallas(x, noise)
+    return quantize_ref(x, noise)
+
+
+def dequantize(q, scale, use_kernel: bool = True):
+    if use_kernel:
+        return dequantize_pallas(q, scale)
+    return dequantize_ref(q, scale)
+
+
+def quantize_flat(x: jnp.ndarray, key: jax.Array, use_kernel: bool = True):
+    """Quantize a flat (n,) buffer in CHUNK-sized rows.
+
+    Returns (q (rows, CHUNK) int8, scales (rows,), n) — padding is zeros.
+    """
+    n = x.shape[0]
+    rows = max(1, round_up(n, CHUNK) // CHUNK)
+    xp = jnp.pad(x.astype(jnp.float32), (0, rows * CHUNK - n)).reshape(
+        rows, CHUNK
+    )
+    noise = jax.random.uniform(key, (rows, CHUNK), jnp.float32)
+    q, s = quantize(xp, noise, use_kernel=use_kernel)
+    return q, s, n
+
+
+def dequantize_flat(q, scales, n: int, use_kernel: bool = True):
+    out = dequantize(q, scales, use_kernel=use_kernel).reshape(-1)
+    return out[:n]

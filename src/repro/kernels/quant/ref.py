@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the int8 gradient-compression kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(
+    x: jnp.ndarray, noise: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row symmetric int8 quantization with stochastic rounding.
+
+    x: (R, C) float; noise: (R, C) uniform [0, 1) rounding randomness.
+    Returns (q int8 (R, C), scale f32 (R,)).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1)
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    y = xf / scale[:, None]
+    q = jnp.floor(y + noise.astype(jnp.float32))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[:, None]

@@ -1,0 +1,411 @@
+"""HLO-text cost analyzer with while-loop trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE — under
+scan-over-layers (and microbatch/attention-chunk scans) that undercounts
+FLOPs, bytes and collective traffic by the product of trip counts.  This
+module re-derives the three roofline inputs from the post-SPMD HLO text:
+
+  * FLOPs       — dot ops: 2 * prod(output dims) * prod(contracting dims);
+                  elementwise ops: prod(output dims) (x8 transcendentals);
+  * bytes       — per *top-level* instruction: operand + output bytes
+                  (fusion-internal instructions are VMEM traffic and are
+                  counted for FLOPs but not bytes);
+  * collectives — output bytes per op kind (all-reduce x2 for ring RS+AG);
+
+with every computation reachable through ``while(...)`` scaled by the
+loop's ``known_trip_count`` (fallback: the max s32 constant in the loop
+condition), recursively — nested scans multiply.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["HloCost", "analyze"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(
+    r"\b(pred|s4|u4|s8|u8|s16|u16|bf16|f16|f8e4m3fn|f8e5m2|s32|u32|f32|s64|u64|f64|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_ELEMENTWISE = {
+    "add": 1, "subtract": 1, "multiply": 1, "divide": 1, "maximum": 1,
+    "minimum": 1, "compare": 1, "select": 1, "and": 1, "or": 1, "xor": 1,
+    "negate": 1, "abs": 1, "floor": 1, "ceil": 1, "round-nearest-afz": 1,
+    "clamp": 2, "sign": 1,
+}
+_TRANSCENDENTAL = {
+    "exponential": 8, "log": 8, "tanh": 8, "rsqrt": 4, "sqrt": 4,
+    "power": 10, "logistic": 8, "sine": 8, "cosine": 8, "erf": 8,
+    "exponential-minus-one": 8, "log-plus-one": 8, "cbrt": 8, "atan2": 10,
+}
+_REDUCE_OPS = {"reduce": 1, "reduce-window": 1}
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    def scaled(self, k: float) -> "HloCost":
+        out = HloCost(self.flops * k, self.bytes * k, self.transcendentals * k)
+        for op, b in self.collective_bytes.items():
+            out.collective_bytes[op] = b * k
+        return out
+
+    def add(self, other: "HloCost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.transcendentals += other.transcendentals
+        for op, b in other.collective_bytes.items():
+            self.collective_bytes[op] += b
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _shapes_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> float:
+    """Elements of the FIRST shape in the type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0.0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return float(n)
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and ("->" in line):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(text: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    return m.group(1) if m else None
+
+
+def analyze(text: str, details: dict | None = None) -> HloCost:
+    """Analyze the module; if ``details`` is a dict, per-op aggregated
+    (flops, bytes) scaled by loop multipliers are accumulated into it keyed
+    by (op, type_str)."""
+    comps = _split_computations(text)
+    # Instruction shape maps per computation (name -> type string).
+    shape_map: dict[str, dict[str, str]] = {}
+    for cname, lines in comps.items():
+        m: dict[str, str] = {}
+        for line in lines:
+            im = _INSTR_RE.match(line)
+            if im:
+                m[im.group(1)] = im.group(2)
+        shape_map[cname] = m
+
+    # Trip count per while's body/cond computations.
+    memo: dict[str, HloCost] = {}
+    detail_memo: dict[str, dict] = {}
+
+    def _merge_details(dst: dict, src: dict, k: float = 1.0):
+        for key, (f, b) in src.items():
+            cur = dst.setdefault(key, [0.0, 0.0])
+            cur[0] += f * k
+            cur[1] += b * k
+
+    def max_s32_const(cname: str) -> int:
+        best = 1
+        for line in comps.get(cname, ()):
+            cm = re.search(r"s32\[\]\s+constant\((\d+)\)", line)
+            if cm:
+                best = max(best, int(cm.group(1)))
+        return best
+
+    _slice_memo: dict[tuple[str, int], float | None] = {}
+    _dus_memo: dict[str, float | None] = {}
+
+    def _dus_output_bytes(comp: str) -> float | None:
+        """If the fusion's ROOT is a dynamic-update-slice (scan ys / cache
+        writes), the in-place write touches only the update operand — return
+        its bytes; None otherwise (full output charged)."""
+        if comp in _dus_memo:
+            return _dus_memo[comp]
+        result: float | None = None
+        smap_c = shape_map.get(comp, {})
+        for line in comps.get(comp, ()):
+            s = line.strip()
+            if s.startswith("ROOT"):
+                im = _INSTR_RE.match(line)
+                if im and im.group(3) == "dynamic-update-slice":
+                    ops = _OPERAND_RE.findall(im.group(4))
+                    if len(ops) >= 2:
+                        result = _shapes_bytes(smap_c.get(ops[1], ""))
+                break
+        _dus_memo[comp] = result
+        return result
+    # Layout/view ops that don't change the bytes logically consumed; a
+    # full-tensor transpose/copy fused into a loop body is a CPU-backend
+    # artifact (XLA:TPU pipelines scan xs with async slices), so we follow
+    # these to the terminal slice and charge the sliced bytes.
+    _PASSTHROUGH = ("transpose", "copy", "bitcast", "reshape", "convert")
+    # dynamic-update-slice treated as 0-byte READ of the buffer operand
+    # (write-only; the write is charged via _dus_output_bytes).
+    _SLICELIKE = ("dynamic-slice", "slice", "gather")
+
+    def _sliced_operand_bytes(comp: str, param_idx: int) -> float | None:
+        """Bytes logically read from parameter `param_idx` of a fusion body:
+        summed slice-output bytes when every (transitively, through layout
+        ops) consumer is a (dynamic-)slice/gather; None -> full operand."""
+        key = (comp, param_idx)
+        if key in _slice_memo:
+            return _slice_memo[key]
+        instrs = []
+        for line in comps.get(comp, ()):
+            im = _INSTR_RE.match(line)
+            if im:
+                instrs.append(im)
+        pname = None
+        for im in instrs:
+            if im.group(3) == "parameter" and im.group(4).startswith(
+                f"{param_idx})"
+            ):
+                pname = im.group(1)
+                break
+        result: float | None = None
+        if pname is not None:
+            frontier = {pname}
+            read = 0.0
+            ok = True
+            seen = False
+            for _ in range(8):  # bounded chain depth
+                nxt: set[str] = set()
+                for im in instrs:
+                    name, type_str, op, rest = im.groups()
+                    if name in frontier:
+                        continue
+                    if not any(
+                        re.search(rf"%{re.escape(f)}\b", rest)
+                        for f in frontier
+                    ):
+                        continue
+                    seen = True
+                    if op in _SLICELIKE:
+                        read += _shapes_bytes(type_str)
+                    elif op == "dynamic-update-slice":
+                        pass  # write-only w.r.t. the buffer operand
+                    elif op in _PASSTHROUGH:
+                        nxt.add(name)
+                    else:
+                        ok = False
+                        break
+                if not ok or not nxt:
+                    break
+                frontier = nxt
+            if seen and ok:
+                result = read
+        _slice_memo[key] = result
+        return result
+
+    def comp_cost(cname: str, count_bytes: bool = True) -> HloCost:
+        """Cost of one computation.  ``count_bytes=False`` inside fusion
+        bodies: fusion-internal transposes/copies/elementwise are VMEM
+        traffic, not HBM — only the fusion boundary (operands + output)
+        touches HBM.  FLOPs are always counted."""
+        key = (cname, count_bytes)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # break cycles defensively
+        detail_memo[key] = {}
+        total = HloCost()
+        det: dict = {}
+        smap = shape_map.get(cname, {})
+
+        def note(op, type_str, f, b):
+            cur = det.setdefault((op, type_str), [0.0, 0.0])
+            cur[0] += f
+            cur[1] += b
+
+        for line in comps.get(cname, ()):
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            name, type_str, op, rest = im.groups()
+            out_bytes = _shapes_bytes(type_str)
+            out_elems = _shape_elems(type_str)
+
+            if op == "while":
+                cb = _COND_BODY_RE.search(rest)
+                trips = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trips = int(tm.group(1))
+                elif cb:
+                    trips = max_s32_const(cb.group(1))
+                if cb:
+                    inner = HloCost()
+                    inner.add(comp_cost(cb.group(2), count_bytes))
+                    inner.add(comp_cost(cb.group(1), count_bytes))
+                    total.add(inner.scaled(trips))
+                    _merge_details(det, detail_memo[(cb.group(2), count_bytes)], trips)
+                    _merge_details(det, detail_memo[(cb.group(1), count_bytes)], trips)
+                continue
+            if op in ("fusion", "call", "async-start", "custom-call"):
+                cm = _CALLS_RE.search(rest)
+                inner_bytes = count_bytes if op == "call" else False
+                if cm:
+                    total.add(comp_cost(cm.group(1), inner_bytes))
+                    _merge_details(det, detail_memo[(cm.group(1), inner_bytes)])
+                if count_bytes:
+                    # Fusion boundary bytes: operands + output.  An operand
+                    # consumed only through (dynamic-)slice/gather inside
+                    # the fusion is charged the sliced bytes, not the full
+                    # tensor (loop bodies dynamic-slice big stacked arrays);
+                    # a dynamic-update-slice root charges the update bytes
+                    # (in-place write), not the whole buffer.
+                    operand_names = _OPERAND_RE.findall(
+                        rest.split("),")[0] + ")"
+                    )
+                    opnds = 0.0
+                    for idx, o in enumerate(operand_names):
+                        full = _shapes_bytes(smap.get(o, ""))
+                        if cm:
+                            sliced = _sliced_operand_bytes(
+                                cm.group(1), idx
+                            )
+                            if sliced is not None:
+                                full = min(full, sliced)
+                        opnds += full
+                    ob = out_bytes
+                    if cm:
+                        dus = _dus_output_bytes(cm.group(1))
+                        if dus is not None:
+                            ob = min(ob, dus)
+                    total.bytes += ob + opnds
+                    note(op, type_str, 0.0, ob + opnds)
+                continue
+            if op == "conditional":
+                for cm in re.finditer(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"true_computation=%?([\w.\-]+)|"
+                    r"false_computation=%?([\w.\-]+))",
+                    rest,
+                ):
+                    for g in cm.groups():
+                        if g:
+                            for b in g.split(","):
+                                bn = b.strip().lstrip("%")
+                                total.add(comp_cost(bn, count_bytes))
+                                _merge_details(det, detail_memo[(bn, count_bytes)])
+                if count_bytes:
+                    total.bytes += out_bytes
+                continue
+
+            coll = None
+            for c in _COLL_OPS:
+                if op.startswith(c):
+                    coll = c
+                    break
+            if coll is not None:
+                if op.endswith("-done"):
+                    continue
+                nb = _shapes_bytes(type_str)
+                total.collective_bytes[coll] += nb * (2 if coll == "all-reduce" else 1)
+                if count_bytes:
+                    total.bytes += out_bytes
+                    note(op, type_str, 0.0, out_bytes)
+                continue
+
+            if op == "dot":
+                # contracting dims from lhs shape
+                lhs = _OPERAND_RE.search(rest)
+                lhs_type = smap.get(lhs.group(1), "") if lhs else ""
+                lm = _SHAPE_RE.search(lhs_type)
+                cdims = 1
+                cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                if lm and cd and cd.group(1):
+                    dims = [int(x) for x in lm.group(2).split(",") if x]
+                    for i in cd.group(1).split(","):
+                        ii = int(i)
+                        if ii < len(dims):
+                            cdims *= dims[ii]
+                f = 2.0 * out_elems * cdims
+                b = (out_bytes + _shapes_bytes(lhs_type)) if count_bytes else 0.0
+                total.flops += f
+                total.bytes += b
+                note("dot", type_str, f, b)
+                continue
+
+            f = 0.0
+            if op in _ELEMENTWISE:
+                f = out_elems * _ELEMENTWISE[op]
+            elif op in _TRANSCENDENTAL:
+                f = out_elems * _TRANSCENDENTAL[op]
+                total.transcendentals += out_elems
+            elif op in _REDUCE_OPS:
+                f = out_elems  # ~1 flop per output elem per input..
+            total.flops += f
+            # Top-level instruction HBM traffic: output bytes (operands of
+            # non-fusion ops are usually fused; avoid double count).
+            b = 0.0
+            if count_bytes and op not in (
+                "parameter", "constant", "get-tuple-element", "tuple",
+                "bitcast",
+            ):
+                b = out_bytes
+                total.bytes += b
+            if f or b:
+                note(op, type_str, f, b)
+        memo[key] = total
+        detail_memo[key] = det
+        return total
+
+    entry = _entry_name(text)
+    if entry is None:
+        return HloCost()
+    out = comp_cost(entry, True)
+    if details is not None:
+        _merge_details(details, detail_memo.get((entry, True), {}))
+    return out

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — a 256-chip v5e pod.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods, with the
+"pod" axis crossing the OCS interconnect the paper's scheduler plans
+(collectives/planner.py).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > n:  # dry-run forces 512; single-pod uses the first 256
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    raise RuntimeError(
+        f"need {n} devices for mesh {shape}, have {len(devices)} — run under "
+        "the dry-run entrypoint (XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+    )
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

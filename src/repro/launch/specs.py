@@ -1,0 +1,184 @@
+"""ShapeDtypeStruct input specs per (architecture x shape) cell.
+
+The dry-run lowers step functions against these stand-ins — weak-type
+correct, sharding-annotated, zero allocation.  Modality frontends are stubs
+per the assignment: [audio] gets EnCodec token streams + text-conditioning
+embeddings, [vlm] gets precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.sharding import ShardingRules
+from repro.models.model import Model
+
+__all__ = [
+    "batch_specs",
+    "param_specs",
+    "opt_specs",
+    "cache_specs",
+    "sds",
+]
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _nsh(rules: ShardingRules, spec: P) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec)
+
+
+def batch_specs(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    rules: ShardingRules,
+    with_labels: bool,
+):
+    """Token/label/frontend specs for a train or prefill batch."""
+    GB, S = shape.global_batch, shape.seq_len
+    baxes = rules.mesh_axes_for("batch", GB)
+    tshape = (GB, S, cfg.num_codebooks) if cfg.num_codebooks else (GB, S)
+    tspec = P(baxes, *([None] * (len(tshape) - 1)))
+    batch = {"tokens": sds(tshape, jnp.int32, _nsh(rules, tspec))}
+    if with_labels:
+        batch["labels"] = sds(tshape, jnp.int32, _nsh(rules, tspec))
+    if cfg.encoder_dim:
+        eshape = (GB, cfg.encoder_len, cfg.encoder_dim)
+        batch["encoder"] = sds(
+            eshape, jnp.bfloat16, _nsh(rules, P(baxes, None, None))
+        )
+    return batch
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeSpec, rules: ShardingRules):
+    GB = shape.global_batch
+    baxes = rules.mesh_axes_for("batch", GB)
+    tshape = (GB, 1, cfg.num_codebooks) if cfg.num_codebooks else (GB, 1)
+    batch = {
+        "tokens": sds(
+            tshape, jnp.int32, _nsh(rules, P(baxes, *([None] * (len(tshape) - 1))))
+        )
+    }
+    if cfg.encoder_dim:
+        batch["encoder"] = sds(
+            (GB, cfg.encoder_len, cfg.encoder_dim),
+            jnp.bfloat16,
+            _nsh(rules, P(baxes, None, None)),
+        )
+    return batch
+
+
+def param_specs(
+    model: Model, rules: ShardingRules, mode: str = "tp", dtype=None
+):
+    """Parameter specs.  ``dtype`` overrides storage dtype (serving casts
+    weights to bf16); ``mode`` picks tp vs fsdp partitioning."""
+    from repro.launch.sharding import param_sharding
+
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shards = param_sharding(shapes, rules, mode=mode)
+    return jax.tree.map(
+        lambda s, sh: sds(s.shape, dtype or s.dtype, sh), shapes, shards
+    )
+
+
+def auto_mode(model: Model, rules: ShardingRules, kind: str) -> str:
+    """tp vs fsdp: fsdp when the per-device state would not fit ~half of a
+    16 GiB v5e HBM under model-axis-only sharding (train state = 12 bytes/
+    param f32+moments; serve state = 2 bytes/param bf16)."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(shapes))
+    tp = rules.sizes.get("model", 1)
+    bytes_per = 12.0 if kind == "train" else 2.0
+    return "fsdp" if n * bytes_per / tp > 8 * 2**30 else "tp"
+
+
+def opt_specs(
+    model: Model, rules: ShardingRules, optimizer, zero1: bool = False,
+    mode: str = "tp",
+):
+    """Optimizer-state specs.  ``zero1=True`` additionally shards the m/v/
+    master trees over the data axis on their largest replicated dim
+    (beyond-paper optimization, used by the perf pass)."""
+    p_specs = param_specs(model, rules, mode=mode)
+
+    def moment_spec(ps):
+        sharding = ps.sharding
+        if zero1:
+            spec = list(sharding.spec) + [None] * (
+                len(ps.shape) - len(sharding.spec)
+            )
+            data_sz = rules.sizes.get("data", 1)
+            for i, (ax, dim) in enumerate(zip(spec, ps.shape)):
+                if ax is None and dim % data_sz == 0 and dim >= data_sz:
+                    spec[i] = "data"
+                    break
+            sharding = _nsh(rules, P(*spec))
+        return sds(ps.shape, jnp.float32, sharding)
+
+    out = {
+        "m": jax.tree.map(moment_spec, p_specs),
+        "v": jax.tree.map(moment_spec, p_specs),
+        "count": sds((), jnp.int32, _nsh(rules, P())),
+    }
+    if getattr(optimizer, "master_weights", False):
+        out["master"] = jax.tree.map(moment_spec, p_specs)
+    return out
+
+
+_SEQ_LEAVES = re.compile(r"(k|v|c_kv|k_rope)$")
+
+
+def cache_specs(
+    model: Model, rules: ShardingRules, batch: int, max_len: int
+):
+    """Decode-cache specs.
+
+    Per-leaf policy: shard the batch dim over the batch axes when divisible;
+    otherwise (long_500k: batch 1) shard the sequence dim of KV/latent
+    caches over 'data' (context parallelism).  The trailing feature dim
+    (heads / latent rank / state width) shards over 'model' when divisible.
+    """
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    baxes = rules.mesh_axes_for("batch", batch)
+    data_sz = rules.sizes.get("data", 1)
+    model_sz = rules.sizes.get("model", 1)
+
+    def spec_for(path_keys, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path_keys]
+        stacked = "units" in names  # leading reps dim from scan stacking
+        o = 1 if stacked else 0
+        spec = [None] * leaf.ndim
+        # batch dim
+        if leaf.ndim > o and baxes is not None and leaf.shape[o] % max(
+            rules._axes_size(baxes if isinstance(baxes, tuple) else (baxes,)), 1
+        ) == 0:
+            spec[o] = baxes
+        elif (
+            leaf.ndim > o + 1
+            and _SEQ_LEAVES.search(names[-1] if names else "")
+            and leaf.shape[o + 1] % data_sz == 0
+        ):
+            spec[o + 1] = "data"  # context parallelism for batch=1 decode
+        # kv-heads dim for attention caches (B, S, Hkv, Dh)
+        if (
+            names
+            and _SEQ_LEAVES.search(names[-1])
+            and leaf.ndim == o + 4
+            and leaf.shape[o + 2] % model_sz == 0
+        ):
+            spec[o + 2] = "model"
+        elif leaf.ndim >= o + 2 and leaf.shape[-1] % model_sz == 0:
+            spec[-1] = "model"
+        return sds(leaf.shape, leaf.dtype, _nsh(rules, P(*spec)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = [spec_for(kp, leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

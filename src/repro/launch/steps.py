@@ -1,0 +1,76 @@
+"""Step functions lowered by the dry-run and executed by the trainer/server.
+
+  train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+  prefill_step(params, batch)          -> (last_logits, cache)
+  serve_step(params, cache, batch, pos)-> (logits, cache)   [one new token]
+"""
+
+from __future__ import annotations
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamW, constant_schedule
+
+import jax
+
+__all__ = ["make_train_step", "make_prefill_step", "make_serve_step", "default_optimizer"]
+
+
+def default_optimizer() -> AdamW:
+    return AdamW(schedule=constant_schedule(3e-4))
+
+
+def make_train_step(
+    model: Model,
+    optimizer: AdamW | None = None,
+    num_microbatches: int = 1,
+):
+    """Train step with optional gradient accumulation.
+
+    Microbatching bounds per-step activation/dispatch memory (the MoE
+    dispatch buffers scale with live tokens x top_k) at the cost of running
+    the backward's gradient all-reduce once per microbatch.
+    """
+    opt = optimizer or default_optimizer()
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            n = num_microbatches
+
+            def split(x):
+                return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                return (
+                    acc[0] + l / n,
+                    jax.tree.map(lambda a, b: a + b / n, acc[1], g),
+                ), None
+
+            zeros = jax.tree.map(
+                lambda p: jax.numpy.zeros(p.shape, jax.numpy.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jax.numpy.zeros((), jax.numpy.float32), zeros), micro
+            )
+        params, opt_state, stats = opt.update(params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos)
+
+    return serve_step

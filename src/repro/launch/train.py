@@ -1,0 +1,190 @@
+"""End-to-end training driver.
+
+Wires together: model zoo, sharded train step (microbatched), synthetic data
+pipeline, async checkpointing, failure injection + restart, straggler
+tracking, optional int8 gradient compression, and the coflow collective
+planner (bucket issue order + exported OCS plane schedule).
+
+CPU-friendly by default (reduced config, local mesh); `--full-config` uses
+the exact architecture (for real accelerator fleets).
+
+Usage:
+  python -m repro.launch.train --arch gemma3-1b --steps 100
+  python -m repro.launch.train --arch stablelm-1.6b --steps 200 \
+      --inject-failure 50 --checkpoint-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--d-model", type=int, default=0, help="override width")
+    ap.add_argument("--layers", type=int, default=0, help="override depth")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--inject-failure", type=int, default=0)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--plan-collectives", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch
+    from repro.data.pipeline import SyntheticTokens, make_batch_iterator
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.sharding import ShardingRules, activate, param_sharding
+    from repro.launch.steps import make_train_step
+    from repro.models.model import build_model, param_count
+    from repro.optim.adamw import AdamW, cosine_schedule
+    from repro.runtime.fault_tolerance import (
+        FailureInjector, NodeFailure, StragglerMitigator, run_with_restarts,
+    )
+
+    cfg = get_arch(args.arch)
+    if not args.full_config:
+        overrides = {}
+        if args.d_model:
+            overrides.update(
+                d_model=args.d_model, head_dim=max(args.d_model // 4, 8)
+            )
+        if args.layers:
+            overrides["num_layers"] = args.layers
+        cfg = cfg.reduced(vocab_size=min(cfg.vocab_size, 4096), **overrides)
+    model = build_model(cfg)
+    opt = AdamW(
+        schedule=cosine_schedule(args.lr, args.steps // 10 + 1, args.steps)
+    )
+    step_fn = jax.jit(
+        make_train_step(model, opt, num_microbatches=args.microbatches),
+        donate_argnums=(0, 1),
+    )
+
+    mesh = make_local_mesh()
+    rules = ShardingRules(mesh)
+
+    source = SyntheticTokens(
+        cfg.vocab_size,
+        args.seq,
+        args.batch,
+        num_codebooks=cfg.num_codebooks,
+        encoder_shape=(cfg.encoder_len, cfg.encoder_dim)
+        if cfg.encoder_dim
+        else None,
+    )
+    data = make_batch_iterator(source)
+
+    ckpt = None
+    if args.checkpoint_dir:
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        ckpt = Checkpointer(args.checkpoint_dir)
+    injector = FailureInjector(
+        fail_at_steps=(args.inject_failure,) if args.inject_failure else (),
+        max_failures=1,  # one-shot: the "node" is replaced after restart
+    )
+    straggler = StragglerMitigator()
+
+    if args.plan_collectives:
+        from repro.collectives.planner import buckets_from_params, plan
+
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        buckets = buckets_from_params(shapes, bucket_bytes=16 << 20)
+        cplan = plan(buckets, num_pods=2)
+        print(
+            f"[planner] {len(buckets)} gradient buckets -> "
+            f"CCT ours {cplan.cct_ours:.1f} ms vs FIFO {cplan.cct_fifo:.1f} ms "
+            f"(speedup {cplan.speedup:.2f}x); issue order: "
+            + ", ".join(cplan.order[:6])
+            + ("..." if len(cplan.order) > 6 else "")
+        )
+
+    error_fb = None
+
+    def make_state():
+        params = model.init(jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt.init(params)}
+
+    def train_loop(state, start_step):
+        nonlocal error_fb
+        params, opt_state = state["params"], state["opt"]
+        with activate(rules):
+            for step in range(start_step, args.steps):
+                injector.check(step)
+                t0 = time.perf_counter()
+                batch = {
+                    k: jnp.asarray(v) for k, v in next(data).items()
+                }
+                if args.compress_grads:
+                    from repro.runtime.compression import (
+                        compressed_allreduce, init_error_feedback,
+                    )
+
+                    # Compress the gradient exchange explicitly (the wire
+                    # path the planner schedules), then update.
+                    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+                    if error_fb is None:
+                        error_fb = init_error_feedback(params)
+                    grads, error_fb = compressed_allreduce(
+                        grads, error_fb, jax.random.fold_in(
+                            jax.random.PRNGKey(7), step
+                        ),
+                    )
+                    params, opt_state, stats = opt.update(
+                        params, grads, opt_state
+                    )
+                    stats = {"loss": loss, **stats}
+                else:
+                    params, opt_state, stats = step_fn(params, opt_state, batch)
+                dt = time.perf_counter() - t0
+                slow = straggler.observe(step, dt)
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    print(
+                        f"step {step:5d} loss {float(stats['loss']):7.4f} "
+                        f"gnorm {float(stats['grad_norm']):8.3f} "
+                        f"{dt*1e3:7.1f} ms{'  [straggler]' if slow else ''}",
+                        flush=True,
+                    )
+                if ckpt and step and step % args.checkpoint_every == 0:
+                    ckpt.save(step, {"params": params, "opt": opt_state})
+        return {"params": params, "opt": opt_state}
+
+    n_params = param_count(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    print(
+        f"training {cfg.name} ({n_params/1e6:.1f}M params) on "
+        f"{len(jax.devices())} device(s), {args.steps} steps"
+    )
+    if ckpt:
+        state, restarts = run_with_restarts(
+            make_state, train_loop, ckpt, args.steps
+        )
+        if restarts:
+            print(f"recovered from {restarts} failure(s) via checkpoint restore")
+    else:
+        try:
+            state = train_loop(make_state(), 0)
+        except NodeFailure as e:
+            raise SystemExit(
+                f"{e} — rerun with --checkpoint-dir for automatic recovery"
+            )
+    if ckpt:
+        ckpt.wait()
+    print("done.")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,473 @@
+"""Model building blocks (pure JAX pytrees, functional).
+
+Conventions:
+  * activations: (batch, seq, ...) — attention internally uses
+    (batch, kv_heads, group, q, k) logits to avoid materializing repeated KV
+    for GQA;
+  * params: nested dicts of jnp arrays, f32 by default, cast to the compute
+    dtype at use;
+  * every attention path is *chunked* over KV with an online softmax (pure
+    jnp; compiles for 32k-500k contexts without materializing full logits).
+    The Pallas flash kernel (kernels/flash_attention) is the TPU-runtime
+    drop-in for the same math (cfg.attention_impl).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# init / numerics helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), dtype) * scale)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, dim), dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding.  x: (B, S, H, D) (D even); positions: (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked online-softmax attention (GQA, causal, sliding window)
+# --------------------------------------------------------------------------
+
+
+def _chunk_mask(q_positions, kv_valid, c_idx, ck, causal, window):
+    """(B, 1, 1, Sq, ck) mask for kv chunk c_idx."""
+    kj = c_idx * ck + jnp.arange(ck)
+    mask = kj[None, :] < kv_valid[:, None]  # (B, ck)
+    mask = mask[:, None, None, None, :]
+    qi = q_positions[:, None, None, :, None]
+    kjb = kj[None, None, None, None, :]
+    if causal:
+        mask = mask & (qi >= kjb)
+    if window is not None:
+        mask = mask & ((qi - kjb) < window)
+    return mask
+
+
+def _attn_constrain(x, axes=("batch", "kv_heads", None, "seq", None)):
+    """Sharding hint for attention-scan carries.  Scan carries initialized
+    from jnp.zeros have no sharding preference, and GSPMD can settle on
+    replicating them across 'data' inside the while body (measured: full-
+    batch f32 logits on llama-vision) — pin batch/seq explicitly."""
+    from repro.launch.sharding import constrain
+
+    return constrain(x, *axes[: x.ndim])
+
+
+def _materialize(*xs):
+    """optimization_barrier around scan xs.
+
+    Without it XLA fuses the (S -> chunks) transpose INTO the scan body, so
+    every loop iteration re-reads (and re-transposes) the FULL tensor
+    instead of its chunk — measured as the dominant HBM term on every
+    chunk-scanned path (attention, mLSTM, sLSTM).  The barrier forces the
+    transposed layout to materialize once outside the loop.
+    """
+    out = jax.lax.optimization_barrier(xs)
+    return out if len(xs) > 1 else out[0]
+
+
+def _chunked_attn_fwd_impl(q, k, v, q_positions, kv_valid, causal, window, ck):
+    """Online-softmax forward.  Returns (out, lse) with
+    out: (B, Sq, Hq, Dv); lse: (B, Hkv, G, Sq) logsumexp of masked logits."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+    n_chunks = Skv // ck
+    ks = k.reshape(B, n_chunks, ck, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, ck, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    ks, vs = _materialize(ks, vs)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * scale
+
+    def body(carry, inputs):
+        m_prev, l_prev, acc = carry
+        k_c, v_c, c_idx = inputs
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, k_c.astype(jnp.float32)
+        )  # (B, Hkv, G, Sq, ck)
+        mask = _chunk_mask(q_positions, kv_valid, c_idx, ck, causal, window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_c.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = _attn_constrain(
+        jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32),
+        ("batch", "kv_heads", None, "seq"),
+    )
+    l0 = _attn_constrain(
+        jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+        ("batch", "kv_heads", None, "seq"),
+    )
+    acc0 = _attn_constrain(jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (ks, vs, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, Dv)
+    # Safe lse: +inf-like for fully-masked rows so bwd probabilities vanish.
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), -NEG_INF)
+    return out.astype(q.dtype), lse
+
+
+def _make_chunked_attention(causal: bool, window: int | None, ck: int):
+    """Flash-semantic chunked attention with a memory-efficient custom VJP.
+
+    The backward pass recomputes per-chunk probabilities from the saved
+    logsumexp instead of letting lax.scan stash every chunk's (Sq x ck)
+    softmax — this is what keeps train-time activation memory flat in
+    sequence length (the jnp analogue of the FlashAttention backward; the
+    Pallas kernel implements the same schedule for the TPU runtime).
+    """
+
+    @jax.custom_vjp
+    def attn(q, k, v, q_positions, kv_valid):
+        out, _ = _chunked_attn_fwd_impl(
+            q, k, v, q_positions, kv_valid, causal, window, ck
+        )
+        return out
+
+    def fwd(q, k, v, q_positions, kv_valid):
+        out, lse = _chunked_attn_fwd_impl(
+            q, k, v, q_positions, kv_valid, causal, window, ck
+        )
+        return out, (q, k, v, q_positions, kv_valid, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, q_positions, kv_valid, out, lse = res
+        B, Sq, Hq, D = q.shape
+        _, Skv, Hkv, Dv = v.shape
+        G = Hq // Hkv
+        scale = D ** -0.5
+        n_chunks = Skv // ck
+        ks = k.reshape(B, n_chunks, ck, Hkv, D).transpose(1, 0, 2, 3, 4)
+        vs = v.reshape(B, n_chunks, ck, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+        ks, vs = _materialize(ks, vs)
+        qg = (
+            q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * scale
+        )
+        dog = dout.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32)
+        # delta[b,h,g,q] = sum_d dout * out
+        delta = jnp.einsum(
+            "bqhgd,bqhgd->bhgq",
+            dog,
+            out.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32),
+        )
+
+        def body(dq_acc, inputs):
+            k_c, v_c, c_idx = inputs
+            k32 = k_c.astype(jnp.float32)
+            v32 = v_c.astype(jnp.float32)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k32)
+            mask = _chunk_mask(
+                q_positions, kv_valid, c_idx, ck, causal, window
+            )
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lse[..., None])  # (B,Hkv,G,Sq,ck)
+            p = jnp.where(mask, p, 0.0)
+            dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", p, dog)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dog, v32)
+            ds = p * (dp - delta[..., None])  # dL/ds (pre-scale)
+            # dL/dq = scale * ds @ k ; dL/dk = ds^T @ (q*scale) = ds^T @ qg.
+            dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds, k32) * scale
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg)
+            return dq_acc, (dk_c, dv_c)
+
+        dq0 = _attn_constrain(
+            jnp.zeros((B, Sq, Hkv, G, D), jnp.float32),
+            ("batch", "seq", "kv_heads", None, None),
+        )
+        dq, (dks, dvs) = jax.lax.scan(
+            body, dq0, (ks, vs, jnp.arange(n_chunks))
+        )
+        dq = dq.reshape(B, Sq, Hq, D).astype(q.dtype)
+        dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, D).astype(k.dtype)
+        dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, Dv).astype(v.dtype)
+        return dq, dk, dv, jnp.zeros_like(res[3]), jnp.zeros_like(res[4])
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def chunked_attention(
+    q,  # (B, Sq, Hq, D)
+    k,  # (B, Skv, Hkv, D)
+    v,  # (B, Skv, Hkv, Dv)
+    q_positions,  # (B, Sq) absolute positions of queries
+    kv_valid_len,  # scalar or (B,) — keys at index >= valid are masked
+    causal: bool = True,
+    window: int | None = None,
+    kv_chunk: int = 1024,
+):
+    """Flash-semantic online-softmax attention; returns (B, Sq, Hq, Dv)."""
+    B, Sq, Hq, D = q.shape
+    Skv = k.shape[1]
+    ck = min(kv_chunk, Skv)
+    n_chunks = -(-Skv // ck)
+    pad = n_chunks * ck - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kv_valid = jnp.asarray(kv_valid_len)
+    if kv_valid.ndim == 0:
+        kv_valid = jnp.broadcast_to(kv_valid, (B,))
+    # Positions/valid enter the custom VJP as float arrays (zero cotangents).
+    q_positions = q_positions.astype(jnp.float32)
+    kv_valid = kv_valid.astype(jnp.float32)
+    fn = _make_chunked_attention(causal, window, ck)
+    return fn(q, k, v, q_positions, kv_valid)
+
+
+def flash_or_chunked(cfg, q, k, v, q_positions, kv_valid_len, causal, window):
+    """Dispatch on cfg.attention_impl ('chunked' jnp vs Pallas 'flash')."""
+    if cfg.attention_impl == "flash":
+        from repro.kernels.flash_attention import flash_attention
+
+        # Kernel layout is (B, H, S, D); uniform q_offset only (runtime path).
+        o = flash_attention(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal,
+            window,
+            int(q_positions[0, 0]) if q_positions.shape[1] == 1 else 0,
+        )
+        return o.transpose(0, 2, 1, 3)
+    return chunked_attention(
+        q, k, v, q_positions, kv_valid_len,
+        causal=causal, window=window, kv_chunk=cfg.kv_chunk,
+    )
+
+
+# --------------------------------------------------------------------------
+# standard GQA attention layer (global or sliding-window)
+# --------------------------------------------------------------------------
+
+
+def attn_init(key, cfg):
+    D, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.zeros(D),
+        "wq": dense_init(ks[0], D, H * Dh),
+        "wk": dense_init(ks[1], D, Hkv * Dh),
+        "wv": dense_init(ks[2], D, Hkv * Dh),
+        "wo": dense_init(ks[3], H * Dh, D),
+    }
+
+
+def attn_apply(p, x, cfg, *, positions, cache=None, pos=None, window=None):
+    """x: (B, S, D).  cache: {'k','v'} (B, Smax, Hkv, Dh) or None.
+
+    Returns (out, new_cache).  With a cache, new K/V are written at `pos`
+    (scalar) and attention runs over the whole cache (masked by validity).
+    """
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, p["norm"])
+    q = (h @ p["wq"].astype(cdt)).reshape(B, S, H, Dh)
+    k = (h @ p["wk"].astype(cdt)).reshape(B, S, Hkv, Dh)
+    v = (h @ p["wv"].astype(cdt)).reshape(B, S, Hkv, Dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0)
+        )
+        new_cache = {"k": ck, "v": cv}
+        kv_valid = pos + S
+        k_all, v_all = ck, cv
+    else:
+        new_cache = None
+        kv_valid = S
+        k_all, v_all = k, v
+    out = flash_or_chunked(
+        cfg, q, k_all.astype(cdt), v_all.astype(cdt),
+        positions, kv_valid, True, window,
+    )
+    out = out.reshape(B, S, H * Dh) @ p["wo"].astype(cdt)
+    return out.astype(x.dtype), new_cache
+
+
+def attn_init_cache(cfg, batch: int, max_len: int, dtype):
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, Hkv, Dh), dtype),
+        "v": jnp.zeros((batch, max_len, Hkv, Dh), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek style)
+# --------------------------------------------------------------------------
+
+
+def mla_init(key, cfg):
+    D, H = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": jnp.zeros(D),
+        "q_down": dense_init(ks[0], D, qr),
+        "q_up": dense_init(ks[1], qr, H * (dn + dr)),
+        "kv_down": dense_init(ks[2], D, kvr + dr),
+        "k_up": dense_init(ks[3], kvr, H * dn),
+        "v_up": dense_init(ks[4], kvr, H * dv),
+        "wo": dense_init(ks[5], H * dv, D),
+    }
+
+
+def mla_apply(p, x, cfg, *, positions, cache=None, pos=None, window=None):
+    """Latent attention.  Cache stores the compressed (c_kv, k_rope) only;
+    decode uses the absorption trick (scores in latent space), so the cache
+    is num_heads-independent — the paper-exact MLA memory saving."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    kvr = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, p["norm"])
+    q = (h @ p["q_down"].astype(cdt)) @ p["q_up"].astype(cdt)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = h @ p["kv_down"].astype(cdt)  # (B, S, kvr + dr)
+    c_kv, k_rope = kv[..., :kvr], kv[..., kvr:]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0)
+        )
+        r_all = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0)
+        )
+        new_cache = {"c_kv": c_all, "k_rope": r_all}
+        kv_valid = pos + S
+    else:
+        c_all, r_all = c_kv, k_rope
+        new_cache = None
+        kv_valid = S
+
+    # Absorption: q_abs = q_nope @ k_up  -> latent-space queries.
+    k_up = p["k_up"].astype(cdt).reshape(kvr, H, dn)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, k_up)  # (B,S,H,kvr)
+    # Attend with "keys" = [c_kv | k_rope] and "queries" = [q_abs | q_rope].
+    q_cat = jnp.concatenate([q_abs, q_rope], axis=-1)  # (B,S,H,kvr+dr)
+    k_cat = jnp.concatenate([c_all, r_all], axis=-1)[:, :, None, :]  # Hkv=1
+    # Values are the latent vectors themselves; decompress after attention.
+    v_lat = c_all[:, :, None, :]  # (B, Skv, 1, kvr)
+    o_lat = chunked_attention(
+        q_cat, k_cat.astype(cdt), v_lat.astype(cdt),
+        positions, kv_valid, True, window, kv_chunk=cfg.kv_chunk,
+    )  # (B, S, H, kvr)
+    v_up = p["v_up"].astype(cdt).reshape(kvr, H, dv)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, v_up).reshape(B, S, H * dv)
+    out = out @ p["wo"].astype(cdt)
+    return out.astype(x.dtype), new_cache
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# cross-attention (VLM / audio conditioning; encoder stubbed as inputs)
+# --------------------------------------------------------------------------
+
+
+def cross_init(key, cfg):
+    D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    E = cfg.encoder_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.zeros(D),
+        "wq": dense_init(ks[0], D, H * Dh),
+        "wk": dense_init(ks[1], E, H * Dh),
+        "wv": dense_init(ks[2], E, H * Dh),
+        "wo": dense_init(ks[3], H * Dh, D),
+    }
+
+
+def cross_apply(p, x, enc, cfg):
+    """x: (B, S, D); enc: (B, T, E) precomputed frontend embeddings."""
+    B, S, D = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, p["norm"])
+    q = (h @ p["wq"].astype(cdt)).reshape(B, S, H, Dh)
+    k = (enc.astype(cdt) @ p["wk"].astype(cdt)).reshape(B, -1, H, Dh)
+    v = (enc.astype(cdt) @ p["wv"].astype(cdt)).reshape(B, -1, H, Dh)
+    zeros = jnp.zeros((B, S), jnp.int32)
+    out = chunked_attention(
+        q, k, v, zeros, k.shape[1], causal=False, window=None,
+        kv_chunk=cfg.kv_chunk,
+    )
+    out = out.reshape(B, S, H * Dh) @ p["wo"].astype(cdt)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# dense SwiGLU FFN
+# --------------------------------------------------------------------------
+
+
+def ffn_init(key, cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.zeros(D),
+        "w_gate": dense_init(ks[0], D, F),
+        "w_up": dense_init(ks[1], D, F),
+        "w_down": dense_init(ks[2], F, D),
+    }
+
+
+def ffn_apply(p, x, cfg):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, p["norm"])
+    g = jax.nn.silu(h @ p["w_gate"].astype(cdt))
+    u = h @ p["w_up"].astype(cdt)
+    return ((g * u) @ p["w_down"].astype(cdt)).astype(x.dtype)

@@ -1,0 +1,349 @@
+"""Model assembly: layer units, scan-over-layers, cache/state threading.
+
+A model is a stack of *blocks* described by cfg.layer_kinds (e.g. gemma3 =
+5 x "local" + 1 x "attn" repeating; recurrentgemma = (rglru, rglru, local)).
+Layers are grouped into repeating units and executed with jax.lax.scan over
+the repetitions (stacked params) — HLO size and compile time stay O(unit)
+instead of O(num_layers), which is what makes the 94-layer qwen3-moe
+dry-run tractable.  Remainder layers (num_layers % unit) are unrolled.
+
+Per-layer state (KV cache / latent cache / recurrent state) threads through
+the same scan as stacked xs/ys.  The train path rematerializes each unit
+(jax.checkpoint) so activation memory is O(L * d_model * S) + one unit's
+internals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import constrain
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+
+__all__ = ["Model", "build_model", "param_count", "param_bytes"]
+
+ATTN_KINDS = ("attn", "local", "mla", "cross")
+
+
+# --------------------------------------------------------------------------
+# per-block init / apply / state-init
+# --------------------------------------------------------------------------
+
+
+def _block_init(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {}
+    if kind in ("attn", "local", "cross"):
+        p["attn"] = L.attn_init(ks[0], cfg)
+    elif kind == "mla":
+        p["attn"] = L.mla_init(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mix"] = xlstm_mod.mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["mix"] = xlstm_mod.slstm_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["mix"] = rglru_mod.rglru_init(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if kind == "cross":
+        p["cross"] = L.cross_init(ks[1], cfg)
+    if cfg.d_ff > 0 and kind not in ("mlstm", "slstm"):
+        p["ffn"] = (
+            moe_mod.moe_init(ks[2], cfg) if cfg.num_experts
+            else L.ffn_init(ks[2], cfg)
+        )
+    return p
+
+
+def _block_state_init(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    if kind in ("attn", "local", "cross"):
+        return L.attn_init_cache(cfg, batch, max_len, dt)
+    if kind == "mla":
+        return L.mla_init_cache(cfg, batch, max_len, dt)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_init_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.slstm_init_state(cfg, batch)
+    if kind == "rglru":
+        return rglru_mod.rglru_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _block_apply(kind, p, x, cfg, *, positions, state, pos, enc):
+    """One residual block.  Returns (x, new_state)."""
+    x = constrain(x, "batch", "seq", "embed")
+    if kind in ("attn", "local", "cross", "mla"):
+        window = cfg.window_size if kind == "local" else None
+        fn = L.mla_apply if kind == "mla" else L.attn_apply
+        delta, new_state = fn(
+            p["attn"], x, cfg,
+            positions=positions, cache=state, pos=pos, window=window,
+        )
+        x = x + delta
+        if kind == "cross":
+            x = x + L.cross_apply(p["cross"], x, enc, cfg)
+    elif kind == "mlstm":
+        delta, new_state = xlstm_mod.mlstm_apply(
+            p["mix"], x, cfg, state=state, chunk=cfg.mlstm_chunk
+        )
+        x = x + delta
+    else:
+        fn = {
+            "slstm": xlstm_mod.slstm_apply,
+            "rglru": rglru_mod.rglru_apply,
+        }[kind]
+        delta, new_state = fn(p["mix"], x, cfg, state=state)
+        x = x + delta
+    if "ffn" in p:
+        ffn = moe_mod.moe_apply if cfg.num_experts else L.ffn_apply
+        x = x + ffn(p["ffn"], x, cfg)
+    return x, new_state
+
+
+# --------------------------------------------------------------------------
+# unit grouping
+# --------------------------------------------------------------------------
+
+
+def _unit_layout(cfg: ModelConfig):
+    unit = tuple(cfg.layer_unit)
+    u = len(unit)
+    reps = cfg.num_layers // u
+    rem_kinds = cfg.layer_kinds[reps * u :]
+    return unit, u, reps, rem_kinds
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# --------------------------------------------------------------------------
+# the Model facade
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable  # (key) -> params
+    forward: Callable  # (params, batch, cache=None, pos=None) -> (logits, cache)
+    loss: Callable  # (params, batch) -> scalar
+    init_cache: Callable  # (batch, max_len) -> cache
+    prefill: Callable  # (params, batch) -> (last_logits, cache)
+    decode_step: Callable  # (params, cache, batch, pos) -> (logits, cache)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    unit, u, reps, rem_kinds = _unit_layout(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    is_audio = cfg.num_codebooks > 0
+
+    # ---------------------------------------------------------------- init
+    def init(key):
+        keys = jax.random.split(key, cfg.num_layers + 2)
+        per_layer = [
+            _block_init(keys[i], cfg.layer_kinds[i], cfg)
+            for i in range(cfg.num_layers)
+        ]
+        units = tuple(
+            _stack_trees([per_layer[r * u + pos] for r in range(reps)])
+            for pos in range(u)
+        ) if reps else tuple()
+        rem = tuple(per_layer[reps * u :])
+        params: dict[str, Any] = {
+            "units": units,
+            "rem": rem,
+            "final_norm": jnp.zeros(cfg.d_model),
+        }
+        if is_audio:
+            for c in range(cfg.num_codebooks):
+                params[f"embed_{c}"] = L.embed_init(
+                    jax.random.fold_in(keys[-1], c),
+                    cfg.vocab_size, cfg.d_model,
+                ) * 0.02
+        else:
+            params["embed"] = L.embed_init(
+                keys[-1], cfg.vocab_size, cfg.d_model
+            ) * 0.02
+        return params
+
+    # ------------------------------------------------------------ backbone
+    def _embed(params, tokens):
+        if is_audio:
+            # tokens: (B, S, num_codebooks) — summed codebook embeddings.
+            x = sum(
+                params[f"embed_{c}"].astype(cdt)[tokens[..., c]]
+                for c in range(cfg.num_codebooks)
+            )
+        else:
+            x = params["embed"].astype(cdt)[tokens]
+        return x * (cfg.d_model ** 0.5)
+
+    def _head(params, x):
+        """Logits in compute dtype, vocab-sharded (cast at the consumer —
+        materializing f32 262k-vocab logits would dominate device memory)."""
+        x = L.rms_norm(x, params["final_norm"])
+        # einsum (not .T matmul): keeps the vocab dim of the tied embedding
+        # sharded through GSPMD instead of gathering the transposed table.
+        if is_audio:
+            logits = jnp.stack(
+                [
+                    jnp.einsum("bsd,vd->bsv", x, params[f"embed_{c}"].astype(cdt))
+                    for c in range(cfg.num_codebooks)
+                ],
+                axis=2,
+            )  # (B, S, C, V)
+        else:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cdt))
+        return constrain(logits, "batch", "seq", *([None] * (logits.ndim - 3)), "vocab")
+
+    def _run_blocks(params, x, states, *, positions, pos, enc, train: bool):
+        new_unit_states = []
+        if reps:
+            def unit_body(x_carry, xs):
+                p_slice, s_slice = xs
+                new_s = []
+                for i, kind in enumerate(unit):
+                    x_carry, ns = _block_apply(
+                        kind, p_slice[i], x_carry, cfg,
+                        positions=positions,
+                        state=None if s_slice is None else s_slice[i],
+                        pos=pos, enc=enc,
+                    )
+                    new_s.append(ns)
+                if s_slice is None:
+                    return x_carry, None
+                return x_carry, tuple(new_s)
+
+            body = jax.checkpoint(unit_body) if train else unit_body
+            xs = (params["units"], states["units"] if states else None)
+            x, scanned_states = jax.lax.scan(body, x, xs)
+            new_unit_states = scanned_states
+        for i, kind in enumerate(rem_kinds):
+            x, ns = _block_apply(
+                kind, params["rem"][i], x, cfg,
+                positions=positions,
+                state=None if states is None else states["rem"][i],
+                pos=pos, enc=enc,
+            )
+            if states is not None:
+                states["rem"] = tuple(
+                    ns if j == i else s for j, s in enumerate(states["rem"])
+                )
+        new_states = (
+            None if states is None
+            else {"units": new_unit_states, "rem": states["rem"]}
+        )
+        return x, new_states
+
+    # -------------------------------------------------------------- public
+    def _hidden(params, batch, cache=None, pos=0, train=False):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        S = tokens.shape[1]
+        x = _embed(params, tokens)
+        x = constrain(x, "batch", "seq", "embed")
+        positions = pos + jnp.arange(S, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+        enc = batch.get("encoder")
+        return _run_blocks(
+            params, x, cache, positions=positions, pos=pos, enc=enc,
+            train=train,
+        )
+
+    def forward(params, batch, cache=None, pos=0, train=False):
+        x, new_cache = _hidden(params, batch, cache=cache, pos=pos, train=train)
+        return _head(params, x), new_cache
+
+    def _xent(params, x_c, y_c):
+        """Per-chunk token cross entropy (summed).  Sharding-friendly:
+        logsumexp + one-hot contraction both reduce over the model-sharded
+        vocab axis in place (take_along_axis would all-gather logits).
+        x is seq-GATHERED first: keeping seq on 'model' here would clash
+        with the vocab-sharded head and push a full (V, D) f32 all-reduce
+        into the embedding backward."""
+        x_c = constrain(x_c, "batch", None, "embed")
+        logits = _head(params, x_c)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        onehot = jax.nn.one_hot(y_c, cfg.vocab_size, dtype=logits.dtype)
+        onehot = constrain(
+            onehot, "batch", "seq", *([None] * (onehot.ndim - 3)), "vocab"
+        )
+        ll = jnp.sum(onehot * logits, axis=-1).astype(jnp.float32)
+        return jnp.sum(lse - ll)
+
+    def loss(params, batch, seq_chunk: int = 512):
+        """Token cross entropy, checkpoint-chunked over the sequence so the
+        (B, S, vocab) logits are never materialized — peak loss memory is
+        one (B, seq_chunk, vocab/TP) tile fwd and bwd."""
+        x, _ = _hidden(params, batch, train=True)
+        labels = batch["labels"]
+        B, S = labels.shape[:2]
+        c = min(S, seq_chunk)
+        if S % c:
+            return _xent(params, x, labels) / labels.size
+        n = S // c
+        xs = x.reshape(B, n, c, -1).transpose(1, 0, 2, 3)
+        ys = labels.reshape(B, n, c, *labels.shape[2:]).transpose(
+            1, 0, 2, *range(3, labels.ndim + 1)
+        )
+
+        def body(tot, inp):
+            x_c, y_c = inp
+            return tot + _xent(params, x_c, y_c), None
+
+        total, _ = jax.lax.scan(
+            jax.checkpoint(body), jnp.zeros((), jnp.float32), (xs, ys)
+        )
+        return total / labels.size
+
+    def init_cache(batch: int, max_len: int):
+        per_layer = [
+            _block_state_init(cfg.layer_kinds[i], cfg, batch, max_len)
+            for i in range(cfg.num_layers)
+        ]
+        return {
+            "units": tuple(
+                _stack_trees([per_layer[r * u + pos] for r in range(reps)])
+                for pos in range(u)
+            ) if reps else tuple(),
+            "rem": tuple(per_layer[reps * u :]),
+        }
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        cache = init_cache(tokens.shape[0], tokens.shape[1])
+        logits, cache = forward(params, batch, cache=cache, pos=0)
+        return logits[:, -1], cache
+
+    def decode_step(params, cache, batch, pos):
+        """batch['tokens']: (B, 1) (or (B, 1, C) audio); pos: scalar int."""
+        logits, cache = forward(params, batch, cache=cache, pos=pos)
+        return logits[:, 0], cache
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        forward=forward,
+        loss=loss,
+        init_cache=init_cache,
+        prefill=prefill,
+        decode_step=decode_step,
+    )
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

@@ -1,0 +1,118 @@
+"""Mixture-of-experts FFN with grouped capacity-based top-k dispatch.
+
+GShard-style dispatch with *group-local* ranking: tokens are split into G
+groups aligned with the data-parallel shards, and the within-expert rank
+(cumulative count) is computed per group.  This keeps every dispatch
+intermediate sharded — a global cumsum over the token axis would force XLA
+to all-gather the (T*K, E) rank tensor (gigabytes at 235B scale).
+
+Pipeline per group g:
+  router top-k -> rank_g(token, slot) -> scatter into buf[g, e, c, :]
+  (expert dim model-sharded => the scatter lowers to the EP all-to-all)
+  -> per-expert SwiGLU einsum -> gather back -> weighted combine.
+
+The (g, e) buffer layout is exactly the pod-to-pod traffic matrix the
+paper's coflow planner schedules across OCS planes (collectives/planner.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.layers import dense_init, rms_norm
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(tokens_per_group: int, cfg) -> int:
+    avg = tokens_per_group * cfg.top_k / cfg.num_experts
+    cap = int(avg * cfg.capacity_factor) + 1
+    return max(8, -(-cap // 8) * 8)  # round up to sublane multiple
+
+
+def moe_init(key, cfg):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.zeros(D),
+        "w_router": dense_init(ks[0], D, E),
+        "w_gate": jax.random.normal(ks[1], (E, D, F)) * (D ** -0.5),
+        "w_up": jax.random.normal(ks[2], (E, D, F)) * (D ** -0.5),
+        "w_down": jax.random.normal(ks[3], (E, F, D)) * (F ** -0.5),
+    }
+
+
+def _num_groups(cfg, T: int) -> int:
+    G = getattr(cfg, "moe_groups", 16)
+    if G > 1 and T % G == 0 and T // G >= 256:
+        return G
+    return 1
+
+
+def moe_apply(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D).  Static capacity, top-k, grouped."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    cdt = jnp.dtype(cfg.compute_dtype)
+    T = B * S
+    G = _num_groups(cfg, T)
+    Tg = T // G
+    C = moe_capacity(Tg, cfg)
+
+    h = rms_norm(x, p["norm"]).reshape(G, Tg, D)
+    h = constrain(h, "expert_group", None, None)
+    logits = (h @ p["w_router"].astype(cdt)).astype(jnp.float32)  # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_e = jax.lax.top_k(probs, K)  # (G, Tg, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Group-local rank of each (token, slot) within its expert.
+    onehot = jax.nn.one_hot(gate_e, E, dtype=jnp.int32)  # (G, Tg, K, E)
+    flat = onehot.reshape(G, Tg * K, E)
+    ranks = jnp.cumsum(flat, axis=1) - flat  # exclusive prefix per group
+    rank = (ranks * flat).sum(-1).reshape(G, Tg, K)
+    keep = rank < C
+    gate_w = jnp.where(keep, gate_w, 0.0)
+
+    # Scatter tokens into the (G, E*C, D) buffer.  vmap over the group dim
+    # gives XLA a scatter whose batch dim aligns with the 'data' sharding of
+    # G, so the dispatch stays local per data shard (a batched advanced-
+    # index scatter would be replicated by GSPMD).  Dropped tokens are
+    # zeroed and their slot clamped into a real row: adding zeros is
+    # harmless and avoids an (E*C+1) scratch row that would break the
+    # divisibility of the expert dim (-> full replication).
+    slot = (gate_e * C + jnp.minimum(rank, C - 1)).reshape(G, Tg * K)
+    tok_rep = jnp.repeat(h[:, :, None, :], K, axis=2)  # (G, Tg, K, D)
+    tok_rep = jnp.where(keep[..., None], tok_rep, 0.0).reshape(G, Tg * K, D)
+    tok_rep = constrain(tok_rep, "expert_group", None, None)
+
+    def scatter_group(slot_g, tok_g):
+        buf_g = jnp.zeros((E * C, D), cdt)
+        return buf_g.at[slot_g].add(tok_g.astype(cdt))
+
+    buf = jax.vmap(scatter_group)(slot, tok_rep)
+    expert_in = buf.reshape(G, E, C, D)
+    # (g -> data, e -> model): resharding here IS the EP all-to-all.
+    expert_in = constrain(expert_in, "expert_group", "expert", None, None)
+
+    g_act = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"].astype(cdt))
+    )
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(cdt))
+    eo = jnp.einsum("gecf,efd->gecd", g_act * u, p["w_down"].astype(cdt))
+    eo = constrain(eo, "expert_group", "expert", None, None)
+    eo = eo.reshape(G, E * C, D)
+    if getattr(cfg, "moe_combine_reshard", False):
+        # Reshard expert outputs back to token (group) shards BEFORE the
+        # gather: the gather becomes shard-local and its backward a local
+        # scatter + reshard, instead of a full-tensor all-reduce.
+        eo = constrain(eo, "expert_group", None, None)
+
+    # Combine: gather each (token, slot)'s expert output and weight it
+    # (dropped tokens gather a real row but carry zero gate weight).
+    out_k = jax.vmap(lambda eo_g, slot_g: eo_g[slot_g])(eo, slot)
+    out_k = out_k.reshape(G, Tg, K, D)
+    out = (out_k * gate_w[..., None].astype(cdt)).sum(axis=2)
+    return out.reshape(B, S, D).astype(x.dtype)

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the Griffin "recurrent block"):
+
+    y = W_out [ GeLU(W_gate x)  ⊙  RG-LRU(conv1d_4(W_in x)) ]
+
+RG-LRU (real-gated linear recurrent unit), per channel:
+
+    r_t = sigmoid(W_r u_t)           (recurrence gate)
+    i_t = sigmoid(W_i u_t)           (input gate)
+    a_t = exp(-c * softplus(L) * r_t)          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ u_t)
+
+Training/prefill uses jax.lax.associative_scan over the sequence (log-depth,
+TPU-friendly); decode carries (h, conv window) state and does O(1) work per
+token.  This is the sub-quadratic path that makes recurrentgemma-2b a
+long_500k architecture.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_init_state"]
+
+_C = 8.0
+
+
+def rglru_init(key, cfg):
+    D, W = cfg.d_model, cfg.lru_width
+    cw = cfg.conv1d_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ U[0.9, 0.999]^c-ish (Griffin appendix).
+    u = jax.random.uniform(ks[5], (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "norm": jnp.zeros(D),
+        "w_in": dense_init(ks[0], D, W),
+        "w_gate": dense_init(ks[1], D, W),
+        "conv": jax.random.normal(ks[2], (cw, W)) * (cw ** -0.5),
+        "w_r": dense_init(ks[3], W, W),
+        "w_i": dense_init(ks[4], W, W),
+        "lambda": lam,
+        "w_out": dense_init(ks[6], W, D),
+    }
+
+
+def _causal_conv1d(u, kernel, prev):
+    """Depthwise causal conv.  u: (B, S, W); kernel: (cw, W);
+    prev: (B, cw-1, W) left context (zeros at sequence start)."""
+    cw = kernel.shape[0]
+    x = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = jnp.zeros_like(u)
+    for t in range(cw):
+        out = out + x[:, t : t + u.shape[1]] * kernel[t]
+    new_prev = x[:, -(cw - 1):] if cw > 1 else prev
+    return out, new_prev
+
+
+def rglru_apply(p, x, cfg, *, state=None):
+    """x: (B, S, D) -> (out, state).  state = (h, conv_prev)."""
+    B, S, D = x.shape
+    W = cfg.lru_width
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h_in = rms_norm(x, p["norm"])
+    gate = jax.nn.gelu(h_in @ p["w_gate"].astype(cdt))
+    u = h_in @ p["w_in"].astype(cdt)
+    if state is None:
+        state = rglru_init_state(cfg, B)
+    h0, conv_prev = state
+    u, conv_prev = _causal_conv1d(u, p["conv"].astype(cdt), conv_prev)
+    uf = u.astype(jnp.float32)
+
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+
+    if S == 1:
+        h = a[:, 0] * h0 + gated[:, 0]
+        hs = h[:, None]
+        new_h = h
+    else:
+        # Associative scan over (a, b): (a2*a1, a2*b1 + b2); fold carried
+        # state in via a virtual step 0.
+        a_all = jnp.concatenate([jnp.ones((B, 1, W)), a], axis=1)
+        b_all = jnp.concatenate([h0[:, None], gated], axis=1)
+
+        def combine(x1, x2):
+            a1, b1 = x1
+            a2, b2 = x2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+        hs = hs[:, 1:]
+        new_h = hs[:, -1]
+
+    out = (hs.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    return out.astype(x.dtype), (new_h, conv_prev)
+
+
+def rglru_init_state(cfg, batch: int):
+    W = cfg.lru_width
+    return (
+        jnp.zeros((batch, W), jnp.float32),
+        jnp.zeros((batch, cfg.conv1d_width - 1, W), jnp.float32),
+    )

@@ -1,0 +1,217 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked parallel form) and sLSTM.
+
+mLSTM is linear attention with per-head scalar input/forget gates and a
+vector normalizer (xLSTM paper, arXiv:2405.04517):
+
+    S_t = f_t * S_{t-1} + i_t * k_t v_t^T        (D x D matrix memory)
+    n_t = f_t * n_{t-1} + i_t * k_t
+    h_t = (q_t S_t) / max(|q_t . n_t|, 1)
+
+We implement the *chunkwise parallel* form (intra-chunk attention matrix +
+inter-chunk state recurrence) so training never materializes per-step
+states.  Simplification vs the paper: gates use sigmoid(f)/exp(clipped i)
+without the max-stabilizer m_t (framework-level fidelity; DESIGN.md §8).
+
+sLSTM keeps the sequential recurrence (block-diagonal per-head recurrent
+kernel) via lax.scan — it is 1/8 of xlstm-1.3b's layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+__all__ = [
+    "mlstm_init", "mlstm_apply", "mlstm_init_state",
+    "slstm_init", "slstm_apply", "slstm_init_state",
+]
+
+
+# ------------------------------------------------------------------- mLSTM
+
+
+def mlstm_init(key, cfg):
+    D, H = cfg.d_model, cfg.num_heads
+    Dh = cfg.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": jnp.zeros(D),
+        "wq": dense_init(ks[0], D, H * Dh),
+        "wk": dense_init(ks[1], D, H * Dh),
+        "wv": dense_init(ks[2], D, H * Dh),
+        "w_if": dense_init(ks[3], D, 2 * H),  # input/forget gate logits
+        "wo": dense_init(ks[4], H * Dh, D),
+        "skip_gate": dense_init(ks[5], D, H * Dh),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, state):
+    """Chunkwise parallel mLSTM.
+
+    q/k/v: (B, n_chunks, C, H, Dh); log_f/log_i: (B, n_chunks, C, H).
+    state: (S (B,H,Dh,Dh), n (B,H,Dh)).  Returns (out, new_state).
+    Scan xs ride in the compute dtype (halves HBM + resharding collective
+    traffic at bf16); the body computes in f32 and emits ys back in the
+    compute dtype.
+    """
+    B, NC, C, H, Dh = q.shape
+    out_dtype = q.dtype
+
+    def body(carry, inp):
+        S_prev, n_prev = carry
+        qc, kc, vc, lf, li = (x.astype(jnp.float32) for x in inp)
+        # Cumulative forget within the chunk: F_t = sum_{s<=t} log f_s.
+        F = jnp.cumsum(lf, axis=1)  # (B, C, H)
+        F_total = F[:, -1]  # (B, H)
+        # Inter-chunk: contribution of the carried state.
+        q_dec = qc * jnp.exp(F)[..., None]  # q_t * exp(F_t)
+        inter = jnp.einsum("bchd,bhde->bche", q_dec, S_prev)
+        inter_n = jnp.einsum("bchd,bhd->bch", q_dec, n_prev)
+        # Intra-chunk: A[t,s] = exp(F_t - F_s + log i_s) for s <= t.
+        gate = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        t_idx = jnp.arange(C)
+        causal = (t_idx[:, None] >= t_idx[None, :])[None, :, :, None]
+        A = jnp.where(causal, jnp.exp(gate), 0.0)  # (B, C, C, H)
+        scores = jnp.einsum("bchd,bshd->bcsh", qc, kc) * A
+        intra = jnp.einsum("bcsh,bshd->bchd", scores, vc)
+        num = inter + intra
+        # q_t . n_t = inter part + sum_s scores[t, s]  (k-weights match).
+        den = inter_n + scores.sum(axis=2)
+        h = num / jnp.maximum(jnp.abs(den)[..., None], 1.0)
+        h = h.astype(out_dtype)  # ys in compute dtype (f32 accum done)
+        # State update: S_new = exp(F_total) S_prev + sum_s exp(F_total-F_s+li_s) k_s v_s^T
+        w = jnp.exp(F_total[:, None, :] - F + li)  # (B, C, H)
+        kw = kc * w[..., None]
+        S_new = S_prev * jnp.exp(F_total)[..., None, None] + jnp.einsum(
+            "bchd,bche->bhde", kw, vc
+        )
+        n_new = n_prev * jnp.exp(F_total)[..., None] + kw.sum(axis=1)
+        return (S_new, n_new), h
+
+    from repro.launch.sharding import constrain
+    from repro.models.layers import _materialize
+
+    qs = q.transpose(1, 0, 2, 3, 4)
+    ks_ = k.transpose(1, 0, 2, 3, 4)
+    vs = v.transpose(1, 0, 2, 3, 4)
+    lfs = log_f.transpose(1, 0, 2, 3)
+    lis = log_i.transpose(1, 0, 2, 3)
+    # v-dim state sharding: v (and everything carrying its feature axis —
+    # the state S, the output h) shards over 'model'; q/k stay replicated.
+    # q/k are explicitly resharded (seq-gathered) HERE, while still bf16 —
+    # otherwise XLA hoists the body's f32 upcast above the gather and the
+    # collective moves twice the bytes (perf log A9).
+    qs = constrain(qs, None, "batch", None, None, None)
+    ks_ = constrain(ks_, None, "batch", None, None, None)
+    vs = constrain(vs, None, "batch", None, None, "state")
+    state = (
+        constrain(state[0], "batch", None, None, "state"),
+        state[1],
+    )
+    qs, ks_, vs, lfs, lis = _materialize(qs, ks_, vs, lfs, lis)
+    (S, n), hs = jax.lax.scan(body, state, (qs, ks_, vs, lfs, lis))
+    out = hs.transpose(1, 0, 2, 3, 4).reshape(B, NC * C, H, Dh)
+    return out, (S, n)
+
+
+def mlstm_apply(p, x, cfg, *, state=None, chunk: int = 256):
+    """x: (B, S, D).  state: (S, n) or None (zeros).  Returns (out, state)."""
+    B, S, D = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, p["norm"])
+    # q/k/v stay in compute dtype through the scan plumbing (resharding +
+    # xs slicing move half the bytes); the chunk body upcasts to f32.
+    q = (h @ p["wq"].astype(cdt)).reshape(B, S, H, Dh)
+    k = (h @ p["wk"].astype(cdt)).reshape(B, S, H, Dh) * (Dh ** -0.5)
+    v = (h @ p["wv"].astype(cdt)).reshape(B, S, H, Dh)
+    gates = (h @ p["w_if"].astype(cdt)).reshape(B, S, 2, H).astype(jnp.float32)
+    log_i = jnp.clip(gates[:, :, 0], -10.0, 10.0)
+    log_f = jax.nn.log_sigmoid(gates[:, :, 1])
+
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    C = min(chunk, S)
+    n_chunks = -(-S // C)
+    pad = n_chunks * C - S
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-30.0)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    rs = lambda a: a.reshape(B, n_chunks, C, *a.shape[2:])
+    out, new_state = _mlstm_chunk_scan(
+        rs(q), rs(k), rs(v), rs(log_f), rs(log_i), state
+    )
+    out = out[:, :S]
+    gate = jax.nn.silu(h @ p["skip_gate"].astype(cdt)).reshape(B, S, H, Dh)
+    # NOTE (perf log A7): projecting via an (h,d)-contracting einsum to keep
+    # the v-dim sharded trades the scan-output all-gather for a full-output
+    # all-reduce per layer — measured WORSE (2.14s vs 1.28s collective);
+    # the gather of the bf16 scan output is the cheaper reshard.
+    out = (out.astype(cdt) * gate).reshape(B, S, H * Dh)
+    return (out @ p["wo"].astype(cdt)).astype(x.dtype), new_state
+
+
+def mlstm_init_state(cfg, batch: int):
+    H, Dh = cfg.num_heads, cfg.head_dim
+    return (
+        jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        jnp.zeros((batch, H, Dh), jnp.float32),
+    )
+
+
+# ------------------------------------------------------------------- sLSTM
+
+
+def slstm_init(key, cfg):
+    D, H = cfg.d_model, cfg.num_heads
+    Dh = cfg.head_dim
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.zeros(D),
+        "w_in": dense_init(ks[0], D, 4 * H * Dh),  # z, i, f, o pre-acts
+        "r": jax.random.normal(ks[1], (H, Dh, 4 * Dh)) * (Dh ** -0.5),
+        "wo": dense_init(ks[2], H * Dh, D),
+    }
+
+
+def slstm_apply(p, x, cfg, *, state=None):
+    """Sequential sLSTM.  x: (B, S, D) -> (out, state)."""
+    B, S, D = x.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hin = rms_norm(x, p["norm"])
+    pre = (hin @ p["w_in"].astype(cdt)).reshape(B, S, H, 4 * Dh)
+    pre = pre.astype(jnp.float32)
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, x_t):
+        c, n, h = carry  # each (B, H, Dh)
+        rec = jnp.einsum("bhd,hde->bhe", h, r)  # (B, H, 4Dh)
+        z, i, f, o = jnp.split(x_t + rec, 4, axis=-1)
+        z = jnp.tanh(z)
+        i = jnp.exp(jnp.clip(i, -10.0, 10.0))
+        f = jax.nn.sigmoid(f)
+        o = jax.nn.sigmoid(o)
+        c = f * c + i * z
+        n = f * n + i
+        h_new = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h_new), h_new
+
+    from repro.models.layers import _materialize
+
+    (c, n, h), hs = jax.lax.scan(
+        step, state, _materialize(pre.transpose(1, 0, 2, 3))
+    )
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, H * Dh).astype(cdt)
+    return (out @ p["wo"].astype(cdt)).astype(x.dtype), (c, n, h)
+
+
+def slstm_init_state(cfg, batch: int):
+    H, Dh = cfg.num_heads, cfg.head_dim
+    z = jnp.zeros((batch, H, Dh), jnp.float32)
+    return (z, z, z)

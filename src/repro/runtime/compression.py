@@ -1,0 +1,80 @@
+"""Gradient compression for cross-pod collectives: int8 + error feedback.
+
+The inter-pod gradient all-reduce travels over the OCS planes the paper's
+scheduler plans; int8 quantization cuts those bytes 4x.  Error feedback
+(Seide et al. / EF-SGD) accumulates the quantization residual into the next
+step so convergence is preserved.  The quantize/dequantize kernels are the
+Pallas `kernels/quant` pair (stochastic rounding).
+
+This module is mesh-agnostic: `compress_tree` / `decompress_tree` transform
+gradient pytrees; the trainer applies them around the cross-pod reduction
+(on a single-axis mesh they wrap the whole gradient exchange).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import dequantize_flat, quantize_flat
+
+__all__ = [
+    "init_error_feedback",
+    "compress_tree",
+    "decompress_tree",
+    "compressed_allreduce",
+]
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, errors, key, use_kernel: bool = True):
+    """Quantize (grads + errors) per leaf; returns (payload, new_errors).
+
+    payload leaves are (q int8, scales, n) triples ready for the wire.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(errors)
+    payload, new_err = [], []
+    for i, (g, e) in enumerate(zip(leaves, err_leaves)):
+        g32 = g.astype(jnp.float32) + e
+        flat = g32.reshape(-1)
+        q, s, n = quantize_flat(flat, jax.random.fold_in(key, i), use_kernel)
+        deq = dequantize_flat(q, s, n, use_kernel).reshape(g.shape)
+        payload.append((q, s, n))
+        new_err.append(g32 - deq)  # residual -> next step
+    return (
+        jax.tree.unflatten(treedef, payload),
+        jax.tree.unflatten(treedef, new_err),
+    )
+
+
+def decompress_tree(payload, like, use_kernel: bool = True):
+    leaves, treedef = jax.tree.flatten(like)
+    flat_payload = jax.tree.leaves(payload, is_leaf=lambda x: isinstance(x, tuple))
+    out = []
+    for (q, s, n), ref in zip(flat_payload, leaves):
+        out.append(
+            dequantize_flat(q, s, n, use_kernel).reshape(ref.shape).astype(ref.dtype)
+        )
+    return jax.tree.unflatten(treedef, out)
+
+
+def compressed_allreduce(grads, errors, key, axis_name: str | None = None):
+    """int8 all-reduce with error feedback.
+
+    Inside shard_map/pmap contexts, pass `axis_name` to psum the quantized
+    payload; under plain pjit the mean over the data axis is already folded
+    into the gradients, so this reduces to a quantize/dequantize round trip
+    (bytes on the wire are what the dry-run measures).
+    """
+    payload, new_err = compress_tree(grads, errors, key)
+    if axis_name is not None:
+        payload = jax.tree.map(
+            lambda x: jax.lax.psum(x, axis_name) if x.dtype == jnp.int8 else x,
+            payload,
+        )
+    restored = decompress_tree(payload, grads)
+    return restored, new_err

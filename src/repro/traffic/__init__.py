@@ -1,0 +1,16 @@
+"""Workload substrate: Facebook trace parsing + synthetic generation."""
+
+from repro.traffic.facebook import (
+    load_fbt,
+    synthesize_facebook_like,
+    TraceCoflow,
+)
+from repro.traffic.instances import sample_instance, paper_default_instance
+
+__all__ = [
+    "load_fbt",
+    "synthesize_facebook_like",
+    "TraceCoflow",
+    "sample_instance",
+    "paper_default_instance",
+]

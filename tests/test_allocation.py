@@ -1,0 +1,92 @@
+"""Tests for the inter-core flow allocation phase."""
+
+import numpy as np
+import pytest
+
+from repro.core.allocation import allocate
+from repro.core.coflow import port_stats
+from repro.core.ordering import wspt_order
+from repro.traffic.instances import random_instance
+
+
+def test_conservation_and_integrality():
+    inst = random_instance(num_coflows=8, num_ports=5, num_cores=4, seed=0)
+    order = wspt_order(inst)
+    alloc = allocate(inst, order)
+    per_core = alloc.per_core_demand(inst.num_coflows, inst.num_ports)
+    # sum_k D^k = D (conservation)...
+    np.testing.assert_allclose(per_core.sum(axis=0), inst.demands)
+    # ...and each flow lives on exactly one core (no splitting).
+    nz_cores = (per_core > 0).sum(axis=0)
+    assert nz_cores.max() <= 1
+
+
+def test_final_port_stats_consistent():
+    inst = random_instance(num_coflows=6, num_ports=4, num_cores=3, seed=1)
+    alloc = allocate(inst, wspt_order(inst))
+    per_core = alloc.per_core_demand(inst.num_coflows, inst.num_ports)
+    for k in range(inst.num_cores):
+        rho_k, tau_k = port_stats(per_core[k])
+        np.testing.assert_allclose(rho_k.sum(axis=0), alloc.rho_ports[k])
+        # tau with multiplicity: sum of per-coflow counts.
+        np.testing.assert_array_equal(tau_k.sum(axis=0), alloc.tau_ports[k])
+
+
+def test_incremental_lb_matches_recompute():
+    inst = random_instance(num_coflows=7, num_ports=4, num_cores=3, seed=2)
+    order = wspt_order(inst)
+    alloc = allocate(inst, order)
+    lb = (
+        alloc.rho_ports / inst.rates[:, None] + alloc.tau_ports * inst.delta
+    ).max(axis=1)
+    np.testing.assert_allclose(alloc.prefix_lb[-1], lb.max(), rtol=1e-12)
+
+
+def test_greedy_beats_single_core_stuffing():
+    """Greedy allocation must do no worse than putting everything on the
+    fastest core (it considers that placement at every step)."""
+    inst = random_instance(num_coflows=8, num_ports=4, num_cores=3, seed=3)
+    order = wspt_order(inst)
+    alloc = allocate(inst, order)
+    rho, tau = port_stats(inst.demands)
+    r_max = float(inst.rates.max())
+    single = (rho.sum(axis=0) / r_max + tau.sum(axis=0) * inst.delta).max()
+    assert alloc.prefix_lb[-1] <= single + 1e-9
+
+
+def test_load_only_ignores_tau():
+    """On a tau-dominated instance, LOAD-ONLY must produce a different
+    (worse-or-equal prefix-LB) placement than the tau-aware rule."""
+    rng = np.random.default_rng(4)
+    # Many tiny flows: reconfiguration dominates.
+    demands = (rng.random((10, 6, 6)) < 0.7) * rng.uniform(0.1, 0.2, (10, 6, 6))
+    from repro.core.coflow import CoflowInstance
+
+    inst = CoflowInstance(
+        demands=demands,
+        weights=np.ones(10),
+        releases=np.zeros(10),
+        rates=np.array([10.0, 20.0, 30.0]),
+        delta=8.0,
+    )
+    order = np.arange(10)
+    a_tau = allocate(inst, order, include_tau=True)
+    a_load = allocate(inst, order, include_tau=False)
+    lb = lambda a: (
+        a.rho_ports / inst.rates[:, None] + a.tau_ports * inst.delta
+    ).max()
+    assert lb(a_load) >= lb(a_tau) - 1e-9
+    assert not np.array_equal(a_tau.core, a_load.core)
+
+
+def test_empty_coflow_tolerated():
+    inst = random_instance(num_coflows=4, num_ports=4, seed=5)
+    demands = inst.demands.copy()
+    demands[2] = 0.0
+    from repro.core.coflow import CoflowInstance
+
+    inst2 = CoflowInstance(
+        demands, inst.weights, inst.releases, inst.rates, inst.delta
+    )
+    alloc = allocate(inst2, np.arange(4))
+    assert not (alloc.coflow == 2).any()

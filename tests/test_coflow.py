@@ -1,0 +1,76 @@
+"""Unit tests for the coflow abstraction and port statistics."""
+
+import numpy as np
+import pytest
+
+from repro.core.coflow import CoflowInstance, flow_table, flows_of, port_stats
+from repro.traffic.instances import random_instance
+
+
+def brute_force_stats(demands):
+    M, N, _ = demands.shape
+    rho = np.zeros((M, 2 * N))
+    tau = np.zeros((M, 2 * N))
+    for m in range(M):
+        for i in range(N):
+            for j in range(N):
+                d = demands[m, i, j]
+                if d > 0:
+                    rho[m, i] += d
+                    rho[m, N + j] += d
+                    tau[m, i] += 1
+                    tau[m, N + j] += 1
+    return rho, tau
+
+
+def test_port_stats_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    demands = np.where(rng.random((5, 6, 6)) < 0.4, rng.uniform(1, 9, (5, 6, 6)), 0.0)
+    rho, tau = port_stats(demands)
+    rho_b, tau_b = brute_force_stats(demands)
+    np.testing.assert_allclose(rho, rho_b)
+    np.testing.assert_array_equal(tau, tau_b)
+
+
+def test_port_stats_single_matrix_promotes():
+    d = np.array([[1.0, 0.0], [2.0, 3.0]])
+    rho, tau = port_stats(d)
+    assert rho.shape == (1, 4)
+    np.testing.assert_allclose(rho[0], [1.0, 5.0, 3.0, 3.0])
+    np.testing.assert_array_equal(tau[0], [1, 2, 2, 1])
+
+
+def test_instance_validation():
+    demands = np.ones((2, 3, 3))
+    with pytest.raises(ValueError):
+        CoflowInstance(demands, np.ones(2), np.zeros(2), np.array([-1.0]), 1.0)
+    with pytest.raises(ValueError):
+        CoflowInstance(demands, np.zeros(2), np.zeros(2), np.ones(2), 1.0)
+    with pytest.raises(ValueError):
+        CoflowInstance(-demands, np.ones(2), np.zeros(2), np.ones(2), 1.0)
+    inst = CoflowInstance(demands, np.ones(2), np.zeros(2), np.ones(2), 1.0)
+    assert inst.aggregate_rate == 2.0
+
+
+def test_flows_of_sorted_descending():
+    d = np.array([[0.0, 5.0], [9.0, 1.0]])
+    i, j, s = flows_of(d)
+    assert list(s) == [9.0, 5.0, 1.0]
+    assert (i[0], j[0]) == (1, 0)
+
+
+def test_flow_table_roundtrip():
+    inst = random_instance(num_coflows=6, num_ports=5, seed=3)
+    ft = flow_table(inst)
+    rebuilt = np.zeros_like(inst.demands)
+    np.add.at(rebuilt, (ft.coflow, ft.src, ft.dst), ft.size)
+    np.testing.assert_allclose(rebuilt, inst.demands)
+
+
+def test_global_lower_bound():
+    inst = random_instance(num_coflows=4, num_ports=4, seed=1)
+    lb = inst.global_lower_bound()
+    rho, _ = inst.port_stats()
+    np.testing.assert_allclose(
+        lb, inst.delta + rho.max(axis=1) / inst.aggregate_rate
+    )

@@ -1,0 +1,127 @@
+"""Property tests for the intra-core scheduling disciplines' invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lp, scheduler
+from repro.core.coflow import CoflowInstance
+
+
+@st.composite
+def instances(draw):
+    M = draw(st.integers(2, 7))
+    N = draw(st.integers(2, 4))
+    K = draw(st.integers(1, 3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    demands = np.where(
+        rng.random((M, N, N)) < 0.5, rng.uniform(1.0, 30.0, (M, N, N)), 0.0
+    )
+    for m in range(M):
+        if demands[m].sum() == 0:
+            demands[m, rng.integers(N), rng.integers(N)] = rng.uniform(1, 30)
+    return CoflowInstance(
+        demands=demands,
+        weights=rng.uniform(0.5, 5.0, M),
+        releases=rng.uniform(0, 20.0, M) if draw(st.booleans()) else np.zeros(M),
+        rates=rng.uniform(5.0, 25.0, K),
+        delta=draw(st.sampled_from([0.0, 2.0, 8.0])),
+    )
+
+
+def _events(cs):
+    """(establish, complete, coflow, src, dst) rows sorted by establish."""
+    order = np.argsort(cs.establish, kind="stable")
+    return [
+        (cs.establish[f], cs.complete[f], cs.coflow[f], cs.src[f], cs.dst[f])
+        for f in order
+    ]
+
+
+@settings(max_examples=20, deadline=None)
+@given(instances())
+def test_reserving_no_priority_inversion_on_ports(inst):
+    """Reserving discipline invariant: when a lower-priority subflow
+    establishes at time t, no higher-priority *released, unscheduled*
+    subflow shares either of its ports at t."""
+    sol = lp.solve_exact(inst)
+    res = scheduler.run(inst, "ours", lp_solution=sol, discipline="reserving")
+    pos = np.empty(inst.num_coflows, dtype=np.int64)
+    pos[res.order] = np.arange(inst.num_coflows)
+    for cs in res.core_schedules:
+        F = len(cs.coflow)
+        for f in range(F):
+            t = cs.establish[f]
+            for g in range(F):
+                if g == f or cs.establish[g] <= t:  # started earlier: fine
+                    continue
+                higher = pos[cs.coflow[g]] < pos[cs.coflow[f]]
+                released = inst.releases[cs.coflow[g]] <= t
+                shares = cs.src[g] == cs.src[f] or cs.dst[g] == cs.dst[f]
+                if higher and released and shares:
+                    # g must have been blocked by a BUSY port at t (not
+                    # merely by f's own establishment).
+                    busy = False
+                    for h in range(F):
+                        if h == g or cs.establish[h] >= t or h == f:
+                            continue
+                        if cs.complete[h] > t and (
+                            cs.src[h] == cs.src[g] or cs.dst[h] == cs.dst[g]
+                        ):
+                            busy = True
+                            break
+                    assert busy, (
+                        f"priority inversion: flow of coflow {cs.coflow[f]} "
+                        f"started at {t} while higher-priority released flow "
+                        f"of coflow {cs.coflow[g]} shared a free port"
+                    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(instances())
+def test_greedy_no_idle_eligible_pair(inst):
+    """Greedy discipline invariant (the Lemma-5 'no idle pair' step): at
+    every establishment time t, any released unscheduled subflow with both
+    ports idle must itself establish at t."""
+    sol = lp.solve_exact(inst)
+    res = scheduler.run(inst, "ours", lp_solution=sol, discipline="greedy")
+    for cs in res.core_schedules:
+        F = len(cs.coflow)
+        times = sorted(set(np.asarray(cs.establish).tolist()))
+        for t in times:
+            for g in range(F):
+                if cs.establish[g] <= t or inst.releases[cs.coflow[g]] > t:
+                    continue
+                # Is either port of g busy at t (by flows established < t,
+                # or establishing exactly at t)?
+                busy = any(
+                    cs.establish[h] <= t < cs.complete[h]
+                    and (cs.src[h] == cs.src[g] or cs.dst[h] == cs.dst[g])
+                    for h in range(F)
+                    if h != g
+                )
+                assert busy, (
+                    f"work-conservation violated: flow of coflow "
+                    f"{cs.coflow[g]} eligible at {t} but establishes later"
+                )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(3, 7))
+def test_bvn_decomposition_properties(seed, n):
+    """BvN: stuffing preserves entries; decomposition reconstructs the
+    stuffed matrix from positive-coefficient permutations."""
+    from repro.core.bvn import bvn_decompose, stuff_to_constant_line_sums
+
+    rng = np.random.default_rng(seed)
+    m = np.where(rng.random((n, n)) < 0.6, rng.uniform(0.5, 9.0, (n, n)), 0.0)
+    s = stuff_to_constant_line_sums(m)
+    assert np.all(s >= m - 1e-12)
+    target = s.sum(axis=1)
+    np.testing.assert_allclose(target, target[0], rtol=1e-9)
+    recon = np.zeros_like(s)
+    for coef, perm in bvn_decompose(s):
+        assert coef > 0
+        assert sorted(perm.tolist()) == list(range(n))
+        recon[np.arange(n), perm] += coef
+    np.testing.assert_allclose(recon, s, atol=1e-6)

@@ -1,0 +1,32 @@
+"""Subprocess smoke test of the multi-pod dry-run (deliverable e).
+
+Runs one real (arch x shape) cell through ``repro.launch.dryrun`` in a
+fresh interpreter (the 512-device XLA flag must precede jax init, so it
+cannot run in-process under pytest).  Marked slow-ish (~1 min).
+"""
+
+import json
+import subprocess
+import sys
+
+
+def test_dryrun_cell_subprocess(tmp_path):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", "gemma3-1b", "--shape", "decode_32k",
+        "--multi-pod", "single", "--out", str(tmp_path),
+    ]
+    proc = subprocess.run(
+        cmd, capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    out = json.loads(
+        (tmp_path / "gemma3-1b__decode_32k__single.json").read_text()
+    )
+    assert out["chips"] == 256
+    assert out["roofline"]["dominant"] in (
+        "compute_s", "memory_s", "collective_s"
+    )
+    assert out["memory"]["peak_estimate_bytes"] > 0
+    assert out["cost"]["device_flops"] > 0

@@ -1,0 +1,186 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All Pallas kernels run in interpret mode on CPU (TPU is the compile
+target); every test asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.lp_terms import lp_terms, lp_terms_ref
+from repro.kernels.port_stats import port_stats, port_stats_ref
+from repro.kernels.quant import (
+    dequantize_flat,
+    dequantize_ref,
+    quantize_flat,
+    quantize_ref,
+)
+from repro.kernels.quant.kernel import dequantize_pallas, quantize_pallas
+
+
+# ---------------------------------------------------------------- port_stats
+@pytest.mark.parametrize(
+    "M,N", [(1, 4), (5, 10), (16, 32), (7, 150), (100, 10)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_port_stats_sweep(M, N, dtype):
+    rng = np.random.default_rng(M * 131 + N)
+    d = np.where(
+        rng.random((M, N, N)) < 0.4, rng.uniform(0.5, 9.0, (M, N, N)), 0.0
+    )
+    d = jnp.asarray(d, dtype)
+    rho_k, tau_k = port_stats(d)
+    rho_r, tau_r = port_stats_ref(d)
+    np.testing.assert_allclose(rho_k, rho_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(tau_k), np.asarray(tau_r))
+
+
+def test_port_stats_matches_numpy_host():
+    """Kernel agrees with the host-side numpy implementation used by the
+    scheduler control plane."""
+    from repro.core.coflow import port_stats as np_port_stats
+
+    rng = np.random.default_rng(3)
+    d = np.where(rng.random((9, 13, 13)) < 0.5, rng.uniform(1, 5, (9, 13, 13)), 0.0)
+    rho_k, tau_k = port_stats(jnp.asarray(d, jnp.float32))
+    rho_n, tau_n = np_port_stats(d)
+    np.testing.assert_allclose(np.asarray(rho_k), rho_n, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(tau_k), tau_n)
+
+
+# ------------------------------------------------------------------ lp_terms
+@pytest.mark.parametrize("M,P", [(10, 8), (100, 20), (130, 44), (256, 300)])
+def test_lp_terms_sweep(M, P):
+    rng = np.random.default_rng(M + P)
+    Y = np.triu(rng.random((M, M)), 1)
+    X = Y + np.tril(1 - Y.T, -1) + np.eye(M)
+    p_rho = rng.uniform(0, 50, (M, P)).astype(np.float32)
+    p_tau = rng.integers(0, 10, (M, P)).astype(np.float32)
+    args = (jnp.asarray(X, jnp.float32), jnp.asarray(p_rho), jnp.asarray(p_tau))
+    tl_k, tr_k = lp_terms(*args, 1 / 60.0, 8 / 3.0)
+    tl_r, tr_r = lp_terms_ref(*args, 1 / 60.0, 8 / 3.0)
+    np.testing.assert_allclose(tl_k, tl_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(tr_k, tr_r, rtol=1e-4, atol=1e-4)
+
+
+def test_lp_terms_zero_delta():
+    """EPS mode: delta_over_K = 0 zeroes the reconfiguration term."""
+    rng = np.random.default_rng(0)
+    M, P = 16, 8
+    X = np.eye(M)
+    p = jnp.asarray(rng.uniform(0, 5, (M, P)), jnp.float32)
+    _, tr = lp_terms(jnp.asarray(X, jnp.float32), p, p, 1.0, 0.0)
+    np.testing.assert_allclose(tr, 0.0)
+
+
+# --------------------------------------------------------------- flash attn
+ATTN_CASES = [
+    # B, Hq, Hkv, Sq, Skv, D, causal, window, off
+    (2, 4, 2, 256, 256, 64, True, None, 0),
+    (1, 8, 1, 128, 128, 64, True, None, 0),
+    (1, 4, 4, 200, 200, 64, True, None, 0),      # non-multiple seq
+    (1, 2, 2, 384, 384, 64, True, 128, 0),       # sliding window
+    (1, 2, 2, 256, 256, 64, True, 100, 0),       # non-tile-aligned window
+    (1, 2, 1, 8, 512, 64, True, None, 504),      # decode: 1 new block
+    (1, 2, 2, 128, 128, 128, False, None, 0),    # bidirectional
+    (1, 3, 1, 64, 320, 32, True, None, 256),     # offset mid-cache
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dtype):
+    B, Hq, Hkv, Sq, Skv, D, causal, window, off = case
+    rng = np.random.default_rng(hash(case) % 2**31)
+    q = jnp.asarray(rng.standard_normal((B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Skv, D)), dtype)
+    o_k = flash_attention(q, k, v, causal, window, off)
+    o_r = attention_ref(q, k, v, causal, window, off)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(o_k, np.float32), np.asarray(o_r, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_grad_matches_ref():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 1, 64, 32)), jnp.float32)
+
+    def loss_k(q, k, v):
+        return (flash_attention(q, k, v) ** 2).sum()
+
+    def loss_r(q, k, v):
+        return (attention_ref(q, k, v) ** 2).sum()
+
+    g_k = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_k, g_r):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_softmax_rows_sum_to_one():
+    """Sanity: output of attention over constant V equals that constant."""
+    q = jnp.ones((1, 2, 64, 32), jnp.float32)
+    k = jnp.asarray(
+        np.random.default_rng(0).standard_normal((1, 1, 64, 32)), jnp.float32
+    )
+    v = jnp.full((1, 1, 64, 32), 3.5, jnp.float32)
+    o = flash_attention(q, k, v)
+    np.testing.assert_allclose(o, 3.5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------- quant
+@pytest.mark.parametrize("R,C", [(4, 128), (64, 512), (33, 300), (1, 64)])
+def test_quant_matches_ref(R, C):
+    rng = np.random.default_rng(R * 7 + C)
+    x = jnp.asarray(rng.standard_normal((R, C)) * 3.0, jnp.float32)
+    noise = jnp.asarray(rng.random((R, C)), jnp.float32)
+    q_k, s_k = quantize_pallas(x, noise)
+    q_r, s_r = quantize_ref(x, noise)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-6)
+    d_k = dequantize_pallas(q_k, s_k)
+    d_r = dequantize_ref(q_r, s_r)
+    np.testing.assert_allclose(d_k, d_r, rtol=1e-6)
+
+
+def test_quant_roundtrip_error_bound():
+    """|x - dq(q(x))| <= scale per element (1 ulp of the int8 grid)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((16, 256)) * 5.0, jnp.float32)
+    noise = jnp.asarray(rng.random((16, 256)), jnp.float32)
+    q, s = quantize_pallas(x, noise)
+    d = dequantize_pallas(q, s)
+    err = np.abs(np.asarray(d) - np.asarray(x))
+    assert np.all(err <= np.asarray(s)[:, None] + 1e-6)
+
+
+def test_quant_stochastic_rounding_unbiased():
+    """E[dq(q(x))] ~= x under stochastic rounding."""
+    x = jnp.full((1, 512), 0.3, jnp.float32)  # 0.3/scale is fractional
+    key = jax.random.PRNGKey(0)
+    acc = np.zeros((1, 512))
+    trials = 64
+    for i in range(trials):
+        noise = jax.random.uniform(jax.random.fold_in(key, i), (1, 512))
+        q, s = quantize_pallas(x, noise)
+        acc += np.asarray(dequantize_pallas(q, s))
+    mean = acc / trials
+    np.testing.assert_allclose(mean.mean(), 0.3, rtol=0.05)
+
+
+def test_quantize_flat_roundtrip():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s, n = quantize_flat(x, jax.random.PRNGKey(1))
+    out = dequantize_flat(q, s, n)
+    assert out.shape == (1000,)
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    assert err.max() < 0.1  # |x| ~ 3 max -> scale ~ 0.03

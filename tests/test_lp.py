@@ -1,0 +1,96 @@
+"""Tests for the ordering LP relaxation (exact + JAX annealed-subgradient)."""
+
+import numpy as np
+import pytest
+
+from repro.core import lp
+from repro.core.coflow import port_stats
+from repro.traffic.instances import random_instance
+
+
+def lp_constraints_satisfied(instance, sol, tol=1e-6):
+    """Check Eq. (2)-(6) directly on a solution."""
+    M = instance.num_coflows
+    R = instance.aggregate_rate
+    K = instance.num_cores
+    rho, tau = port_stats(instance.demands)
+    x = sol.precedence
+    # (2)+(3): pair equalities and box.
+    off = ~np.eye(M, dtype=bool)
+    assert np.all(x[off] >= -tol) and np.all(x[off] <= 1 + tol)
+    np.testing.assert_allclose((x + x.T)[off], 1.0, atol=1e-6)
+    # (4)/(5): capacity constraints via the matmul identity.
+    X = x.copy()
+    np.fill_diagonal(X, 1.0)
+    load = (X.T @ rho) / R
+    rec = (X.T @ tau) * (instance.delta / K)
+    assert np.all(sol.completion + tol >= load.max(axis=1))
+    if instance.delta > 0:
+        assert np.all(sol.completion + tol >= rec.max(axis=1))
+    # (6)
+    assert np.all(sol.completion + tol >= instance.releases)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("release_span", [0.0, 30.0])
+def test_exact_lp_feasible_and_tight(seed, release_span):
+    inst = random_instance(
+        num_coflows=10, num_ports=4, seed=seed, release_span=release_span
+    )
+    sol = lp.solve_exact(inst)
+    lp_constraints_satisfied(inst, sol)
+    # Objective consistent with reported completion values.
+    np.testing.assert_allclose(
+        sol.objective, float(np.dot(inst.weights, sol.completion)), rtol=1e-9
+    )
+
+
+def test_exact_lp_lower_bounds_schedule():
+    """The LP optimum must lower-bound any feasible schedule's weighted CCT."""
+    from repro.core import scheduler
+
+    inst = random_instance(num_coflows=12, num_ports=5, seed=7)
+    sol = lp.solve_exact(inst)
+    res = scheduler.run(inst, "ours", lp_solution=sol)
+    assert res.total_weighted_cct >= sol.objective - 1e-6
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_subgradient_close_to_exact(seed):
+    inst = random_instance(num_coflows=15, num_ports=5, seed=seed)
+    exact = lp.solve_exact(inst)
+    sub = lp.solve_subgradient(inst, iters=2000)
+    # Feasible point: objective upper-bounds the optimum; gap small.
+    assert sub.objective >= exact.objective - 1e-3
+    assert sub.objective <= exact.objective * 1.02
+    lp_constraints_satisfied(inst, sub, tol=1e-3)
+
+
+def test_subgradient_with_releases():
+    inst = random_instance(num_coflows=10, num_ports=4, seed=5, release_span=40.0)
+    exact = lp.solve_exact(inst)
+    sub = lp.solve_subgradient(inst, iters=2000)
+    assert sub.objective <= exact.objective * 1.03
+    assert np.all(sub.completion >= inst.releases - 1e-4)
+
+
+def test_single_coflow_lp_matches_global_bound():
+    """With M=1 the LP reduces to max(a, rho/R, tau*delta/K)."""
+    inst = random_instance(num_coflows=1, num_ports=4, seed=2)
+    sol = lp.solve_exact(inst)
+    rho, tau = port_stats(inst.demands)
+    expect = max(
+        rho[0].max() / inst.aggregate_rate,
+        tau[0].max() * inst.delta / inst.num_cores,
+        inst.releases[0],
+    )
+    np.testing.assert_allclose(sol.completion[0], expect, rtol=1e-8)
+
+
+def test_order_stability():
+    inst = random_instance(num_coflows=8, num_ports=4, seed=9)
+    sol = lp.solve_exact(inst)
+    order = sol.order()
+    assert sorted(order.tolist()) == list(range(8))
+    T = sol.completion[order]
+    assert np.all(np.diff(T) >= -1e-12)

@@ -1,0 +1,80 @@
+"""Validation of the fused mLSTM chunk kernel (interpret mode) against the
+naive per-step recurrence, and cross-validation of the model's chunkwise-
+parallel jnp form against the same oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mlstm_chunk import mlstm_chunk, mlstm_ref
+
+
+def make_inputs(BH, S, D, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((BH, S, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((BH, S, D)) / np.sqrt(D), dtype)
+    v = jnp.asarray(rng.standard_normal((BH, S, D)), dtype)
+    log_f = jnp.asarray(
+        np.log(rng.uniform(0.8, 0.999, (BH, S))), jnp.float32
+    )
+    log_i = jnp.asarray(rng.uniform(-2.0, 1.0, (BH, S)), jnp.float32)
+    return q, k, v, log_f, log_i
+
+
+@pytest.mark.parametrize(
+    "BH,S,D,chunk",
+    [(2, 64, 32, 16), (1, 128, 64, 32), (3, 96, 16, 32), (2, 256, 128, 128)],
+)
+def test_kernel_matches_naive_recurrence(BH, S, D, chunk):
+    q, k, v, lf, li = make_inputs(BH, S, D, seed=BH * S)
+    h_k, (S_k, n_k) = mlstm_chunk(q, k, v, lf, li, chunk=chunk)
+    h_r, (S_r, n_r) = mlstm_ref(q, k, v, lf, li)
+    np.testing.assert_allclose(h_k, h_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(S_k, S_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(n_k, n_r, rtol=2e-4, atol=2e-4)
+
+
+def test_kernel_bf16_inputs():
+    q, k, v, lf, li = make_inputs(1, 64, 32, seed=7, dtype=jnp.bfloat16)
+    h_k, _ = mlstm_chunk(q, k, v, lf, li, chunk=16)
+    h_r, _ = mlstm_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        lf, li,
+    )
+    np.testing.assert_allclose(
+        np.asarray(h_k, np.float32), np.asarray(h_r), rtol=5e-2, atol=5e-2
+    )
+
+
+def test_model_chunk_scan_matches_naive():
+    """The model's chunkwise-parallel form (models/xlstm.py) agrees with the
+    naive recurrence — ties the Pallas kernel, the model, and the oracle
+    together."""
+    from repro.models.xlstm import _mlstm_chunk_scan
+
+    BH, S, D, C = 2, 64, 32, 16
+    q, k, v, lf, li = make_inputs(BH, S, D, seed=3)
+    # model form wants (B, NC, C, H, Dh) with H folded; use H=1.
+    rs = lambda a: a.reshape(BH, S // C, C, 1, D)
+    state = (
+        jnp.zeros((BH, 1, D, D), jnp.float32),
+        jnp.zeros((BH, 1, D), jnp.float32),
+    )
+    out, (S_f, n_f) = _mlstm_chunk_scan(
+        rs(q), rs(k), rs(v),
+        lf.reshape(BH, S // C, C, 1), li.reshape(BH, S // C, C, 1), state,
+    )
+    h_r, (S_r, n_r) = mlstm_ref(q, k, v, lf, li)
+    np.testing.assert_allclose(
+        np.asarray(out[:, :, 0], np.float32), h_r, rtol=2e-3, atol=2e-3
+    )
+    np.testing.assert_allclose(S_f[:, 0], S_r, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_chunk_invariance():
+    q, k, v, lf, li = make_inputs(1, 128, 32, seed=11)
+    h1, (S1, n1) = mlstm_chunk(q, k, v, lf, li, chunk=16)
+    h2, (S2, n2) = mlstm_chunk(q, k, v, lf, li, chunk=64)
+    np.testing.assert_allclose(h1, h2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(S1, S2, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,78 @@
+"""Tests for the coflow-aware collective planner (paper -> framework)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.collectives.planner import (
+    GradientBucket,
+    _a2a_demand,
+    _ring_demand,
+    buckets_from_params,
+    plan,
+)
+
+
+def test_ring_demand_conservation():
+    for P in (2, 4, 8):
+        d = _ring_demand(P, 100.0)
+        # Every pod ships 2(P-1)/P of the bucket to its neighbour.
+        np.testing.assert_allclose(d.sum(axis=1), 2 * (P - 1) / P * 100.0)
+        assert (np.diag(d) == 0).all()
+
+
+def test_a2a_demand():
+    d = _a2a_demand(4, 160.0)
+    assert (np.diag(d) == 0).all()
+    np.testing.assert_allclose(d[0, 1], 10.0)
+
+
+def test_buckets_from_params():
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+
+    model = build_model(get_arch("gemma3-1b").reduced())
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    buckets = buckets_from_params(shapes, bucket_bytes=64 << 10)
+    total = sum(b.bytes for b in buckets)
+    expect = sum(x.size * 2 for x in jax.tree.leaves(shapes))
+    assert total == expect
+    fr = [b.layer_frac for b in buckets]
+    assert fr == sorted(fr) and 0.0 <= fr[0] and fr[-1] == 1.0
+
+
+def test_plan_beats_or_matches_fifo():
+    buckets = [
+        GradientBucket(f"b{i}", (8 + 24 * (i % 3)) << 20, i / 11)
+        for i in range(12)
+    ]
+    p = plan(buckets, num_pods=4, plane_rates_gbps=(25.0, 50.0, 100.0))
+    # Weighted CCT under Algorithm 1 should not lose badly to FIFO, and the
+    # plan must schedule every flow exactly once.
+    assert p.total_weighted_ours <= 1.1 * p.total_weighted_fifo
+    n_flows = sum(len(v) for v in p.plane_of_flow.values())
+    expect = int((p.instance.demands > 0).sum())
+    assert n_flows == expect
+    assert set(p.order) == {b.name for b in buckets}
+
+
+def test_plan_with_a2a_buckets():
+    buckets = [GradientBucket(f"b{i}", 32 << 20, i / 3) for i in range(4)]
+    a2a = [GradientBucket(f"a2a{i}", 16 << 20, i / 3) for i in range(2)]
+    p = plan(buckets, num_pods=4, a2a_buckets=a2a)
+    assert "a2a0" in p.order and "a2a1" in p.order
+    # a2a flows exist between every distinct pod pair.
+    flows = p.plane_of_flow["a2a0"]
+    pairs = {(s, d) for s, d, _, _ in flows}
+    assert len(pairs) == 12  # 4*3 ordered pairs
+
+
+def test_plan_respects_release_times():
+    buckets = [GradientBucket(f"b{i}", 64 << 20, i / 4) for i in range(5)]
+    p = plan(buckets, num_pods=2, backward_ms=50.0)
+    rel = p.instance.releases
+    for k, cs_flows in enumerate(p.plane_of_flow.values()):
+        for _, _, _, t in cs_flows:
+            pass  # establishment times validated inside scheduler.run
+    # Deeper buckets (layer_frac ~ 1) release first.
+    assert rel[-1] == 0.0 or rel[0] >= rel[-1]

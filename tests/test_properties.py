@@ -1,0 +1,105 @@
+"""Hypothesis property-based tests for the scheduling system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lp, scheduler, theory
+from repro.core.coflow import CoflowInstance
+from repro.core.validate import validate_schedule
+
+
+@st.composite
+def instances(draw, max_coflows=6, max_ports=4, max_cores=3):
+    M = draw(st.integers(1, max_coflows))
+    N = draw(st.integers(2, max_ports))
+    K = draw(st.integers(1, max_cores))
+    seed = draw(st.integers(0, 2**31 - 1))
+    delta = draw(st.sampled_from([0.0, 1.0, 8.0]))
+    release_span = draw(st.sampled_from([0.0, 25.0]))
+    rng = np.random.default_rng(seed)
+    demands = np.where(
+        rng.random((M, N, N)) < 0.5, rng.uniform(0.5, 40.0, (M, N, N)), 0.0
+    )
+    for m in range(M):
+        if demands[m].sum() == 0:
+            demands[m, rng.integers(N), rng.integers(N)] = rng.uniform(1, 40)
+    return CoflowInstance(
+        demands=demands,
+        weights=rng.uniform(0.5, 10.0, M),
+        releases=rng.uniform(0, release_span, M) if release_span else np.zeros(M),
+        rates=rng.uniform(4.0, 30.0, K),
+        delta=delta,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances())
+def test_schedule_always_feasible(inst):
+    """Any instance: OURS produces a feasible schedule (port exclusivity,
+    non-preemption, releases, conservation) with finite CCTs."""
+    res = scheduler.run(inst, "ours", lp_method="exact")
+    validate_schedule(inst, res.core_schedules)
+    assert np.isfinite(res.ccts).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(instances())
+def test_theorem1_certificate_property(inst):
+    """Any instance: the ordering/allocation lemmas (2-4, provably correct)
+    hold exactly, and the aggregate (8K/8K+1) ratio — the theorem's headline
+    claim — holds for both scheduler disciplines.  (Per-coflow Lemma-5-chain
+    assertions live in the seeded deterministic tests; see theory.py for
+    the discipline-dependent reproduction finding.)"""
+    sol = lp.solve_exact(inst)
+    for disc in ("reserving", "greedy"):
+        res = scheduler.run(inst, "ours", lp_solution=sol, discipline=disc)
+        rep = theory.certify(
+            inst, res.order, sol.completion, res.allocation, res.ccts
+        )
+        assert rep.lemma2_violation <= 1e-6, (disc, rep)
+        assert rep.lemma3_violation <= 1e-6, (disc, rep)
+        assert rep.lemma4_violation <= 1e-6, (disc, rep)
+        assert rep.approx_ratio <= rep.bound + 1e-6, (disc, rep)
+
+
+@settings(max_examples=15, deadline=None)
+@given(instances(max_coflows=5))
+def test_lp_is_relaxation_property(inst):
+    """LP optimum lower-bounds the constructed schedule for every scheme."""
+    sol = lp.solve_exact(inst)
+    for scheme in ("ours", "wspt_order", "load_only", "sunflow_s"):
+        res = scheduler.run(inst, scheme, lp_solution=sol)
+        assert res.total_weighted_cct >= sol.objective - 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(instances(), st.integers(0, 100))
+def test_weight_scaling_invariance(inst, scale_seed):
+    """Scaling all weights by c > 0 must not change the schedule (ordering
+    by T~ is weight-scale invariant), only the objective."""
+    import dataclasses
+
+    c = 1.0 + (scale_seed % 7)
+    res1 = scheduler.run(inst, "ours", lp_method="exact")
+    inst2 = dataclasses.replace(inst, weights=inst.weights * c)
+    res2 = scheduler.run(inst2, "ours", lp_method="exact")
+    np.testing.assert_allclose(
+        res2.total_weighted_cct, c * res1.total_weighted_cct, rtol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(instances(max_coflows=4))
+def test_rate_scaling_speedup(inst):
+    """Doubling every core rate (and halving delta) halves every CCT."""
+    import dataclasses
+
+    res1 = scheduler.run(inst, "ours", lp_method="exact")
+    inst2 = dataclasses.replace(
+        inst,
+        rates=inst.rates * 2.0,
+        delta=inst.delta / 2.0,
+        releases=inst.releases / 2.0,
+    )
+    res2 = scheduler.run(inst2, "ours", lp_method="exact")
+    np.testing.assert_allclose(res2.ccts, res1.ccts / 2.0, rtol=1e-6)

@@ -1,0 +1,208 @@
+"""Tests for the training substrate: optimizer, data, checkpointing,
+fault tolerance, straggler mitigation, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, latest_step
+from repro.data.pipeline import SyntheticTokens, make_batch_iterator
+from repro.optim.adamw import AdamW, constant_schedule, cosine_schedule
+from repro.runtime.compression import (
+    compress_tree,
+    decompress_tree,
+    init_error_feedback,
+)
+from repro.runtime.fault_tolerance import (
+    FailureInjector,
+    NodeFailure,
+    StragglerMitigator,
+    run_with_restarts,
+)
+
+
+# ------------------------------------------------------------------ optimizer
+def test_adamw_reduces_quadratic():
+    opt = AdamW(schedule=constant_schedule(0.1), weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, state, _ = opt.update(params, grads, state)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_grad_clip():
+    opt = AdamW(schedule=constant_schedule(0.1), grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    _, _, stats = opt.update(params, {"w": jnp.full(4, 100.0)}, state)
+    assert float(stats["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(sched(jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, abs=1e-6)
+
+
+# ----------------------------------------------------------------------- data
+def test_synthetic_tokens_deterministic_and_shifted():
+    src = SyntheticTokens(vocab_size=128, seq_len=16, batch_size=4, seed=3)
+    b = src.next_batch()
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    src2 = SyntheticTokens(vocab_size=128, seq_len=16, batch_size=4, seed=3)
+    np.testing.assert_array_equal(b["tokens"], src2.next_batch()["tokens"])
+
+
+def test_batch_iterator_prefetch():
+    src = SyntheticTokens(vocab_size=64, seq_len=8, batch_size=2)
+    it = make_batch_iterator(src)
+    b1, b2 = next(it), next(it)
+    assert b1["tokens"].shape == b2["tokens"].shape
+    it.close()
+
+
+# ----------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    state = {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3)},
+        "opt": {"m": jnp.ones(3), "count": jnp.asarray(7)},
+    }
+    ck.save(10, state)
+    assert latest_step(str(tmp_path)) == 10
+    restored = ck.restore(10, like=jax.tree.map(lambda x: x, state))
+    np.testing.assert_allclose(restored["params"]["w"], state["params"]["w"])
+    assert int(restored["opt"]["count"]) == 7
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    for step in [1, 2, 3, 4]:
+        ck.save(step, {"x": jnp.full(3, float(step))})
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(tmp_path) if d.startswith("step_")
+    )
+    assert steps == [3, 4]
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(5, {"x": jnp.ones(8)})
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_reshard_restore(tmp_path):
+    """Restore with explicit shardings (elastic re-mesh path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    state = {"w": jnp.arange(8.0)}
+    ck.save(1, state)
+    sh = {"w": NamedSharding(mesh, P())}
+    restored = ck.restore(1, like=state, shardings=sh)
+    np.testing.assert_allclose(restored["w"], state["w"])
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, {"w": jnp.ones(4)})
+    with pytest.raises(ValueError):
+        ck.restore(1, like={"w": jnp.ones(5)})
+
+
+# ------------------------------------------------------------- fault tolerance
+def test_failure_injection_and_restart(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    injector = FailureInjector(fail_at_steps=(7,), max_failures=1)
+    trace = []
+
+    def make_state():
+        return {"x": jnp.zeros(())}
+
+    def loop(state, start):
+        x = state["x"]
+        for step in range(start, 12):
+            injector.check(step)
+            x = x + 1.0
+            trace.append(step)
+            ck.save(step, {"x": x})
+        return {"x": x}
+
+    state, restarts = run_with_restarts(make_state, loop, ck, 12)
+    assert restarts == 1
+    # Steps 0-6 ran, failure at 7, resumed from checkpoint 6 -> step 7..11.
+    assert trace.count(7) == 1 and trace.count(6) == 1
+    assert float(state["x"]) == 12.0
+
+
+def test_restart_budget_exhausted(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    injector = FailureInjector(fail_at_steps=(0,), max_failures=100)
+
+    def loop(state, start):
+        injector.check(0)
+        return state
+
+    with pytest.raises(NodeFailure):
+        run_with_restarts(lambda: {}, loop, ck, 1, max_restarts=2)
+
+
+def test_straggler_detection():
+    s = StragglerMitigator(factor=3.0)
+    for step in range(10):
+        assert not s.observe(step, 1.0)
+    assert s.observe(10, 10.0)  # 10x median
+    assert s.stragglers == [10]
+    assert s.deadline() == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------- compression
+def test_compression_error_feedback_reduces_bias():
+    """With error feedback the accumulated dequantized sum tracks the true
+    gradient sum much more closely than without."""
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.standard_normal(1000) * 0.1, jnp.float32)
+    grads = {"w": g_true}
+    err = init_error_feedback(grads)
+    key = jax.random.PRNGKey(0)
+    total_ef = np.zeros(1000)
+    total_raw = np.zeros(1000)
+    steps = 20
+    for t in range(steps):
+        payload, err = compress_tree(grads, err, jax.random.fold_in(key, t))
+        total_ef += np.asarray(decompress_tree(payload, grads)["w"])
+        payload_raw, _ = compress_tree(
+            grads, init_error_feedback(grads), jax.random.fold_in(key, 1000 + t)
+        )
+        total_raw += np.asarray(decompress_tree(payload_raw, grads)["w"])
+    true_sum = np.asarray(g_true) * steps
+    ef_err = np.abs(total_ef - true_sum).mean()
+    raw_err = np.abs(total_raw - true_sum).mean()
+    assert ef_err <= raw_err + 1e-6
+    assert ef_err < 0.02 * np.abs(true_sum).mean() + 1e-3
+
+
+def test_compression_roundtrip_shapes():
+    grads = {"a": jnp.ones((3, 5)), "b": {"c": jnp.zeros(7)}}
+    err = init_error_feedback(grads)
+    payload, err2 = compress_tree(grads, err, jax.random.PRNGKey(1))
+    out = decompress_tree(payload, grads)
+    assert out["a"].shape == (3, 5)
+    assert out["b"]["c"].shape == (7,)
+    np.testing.assert_allclose(out["a"], 1.0, atol=0.02)

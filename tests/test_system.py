@@ -1,0 +1,42 @@
+"""End-to-end behaviour tests for the paper's system."""
+
+import numpy as np
+
+from repro.core import lp, scheduler, theory
+from repro.traffic.instances import paper_default_instance
+
+
+def test_paper_default_end_to_end():
+    """Full Algorithm 1 on the paper's default setting (N=10, M=100, K=3,
+    rates [10,20,30], delta=8): feasible, certified, practical ratio in the
+    paper's observed band (Fig. 6: ~2.5-5.0, far below 8K=24)."""
+    inst = paper_default_instance(seed=0)
+    sol = lp.solve_exact(inst)
+    res = scheduler.run(inst, "ours", lp_solution=sol)
+    rep = theory.certify(inst, res.order, sol.completion, res.allocation, res.ccts)
+    assert rep.ok(), rep
+    assert 1.0 <= rep.approx_ratio <= 8.0
+    assert res.total_weighted_cct > 0
+
+
+def test_all_schemes_on_default():
+    inst = paper_default_instance(seed=2)
+    sol = lp.solve_exact(inst)
+    results = {}
+    for s in ["ours", "wspt_order", "load_only", "sunflow_s", "bvn_s"]:
+        results[s] = scheduler.run(inst, s, lp_solution=sol)
+    base = results["ours"].total_weighted_cct
+    norm = {s: r.total_weighted_cct / base for s, r in results.items()}
+    # Fig. 3 qualitative ordering.
+    assert norm["bvn_s"] == max(norm.values())
+    assert norm["ours"] <= norm["load_only"]
+    assert norm["ours"] <= norm["sunflow_s"]
+
+
+def test_subgradient_order_good_enough():
+    """The JAX LP path must yield a schedule within 15% of the exact path."""
+    inst = paper_default_instance(seed=4)
+    exact = scheduler.run(inst, "ours", lp_method="exact")
+    sub_sol = lp.solve_subgradient(inst)
+    sub = scheduler.run(inst, "ours", lp_solution=sub_sol)
+    assert sub.total_weighted_cct <= 1.15 * exact.total_weighted_cct

@@ -1,0 +1,68 @@
+"""Tests for the traffic substrate (FBT parser + synthetic trace)."""
+
+import numpy as np
+
+from repro.traffic.facebook import (
+    load_fbt,
+    synthesize_facebook_like,
+    to_demands,
+)
+from repro.traffic.instances import paper_default_instance, sample_instance
+
+
+def test_fbt_parser_roundtrip(tmp_path):
+    path = tmp_path / "trace.fbt"
+    path.write_text(
+        "150 2\n"
+        "0 100 2 5 9 2 3:12.5 7:4.0\n"
+        "1 250 1 2 1 8:9.75\n"
+    )
+    coflows = load_fbt(str(path))
+    assert len(coflows) == 2
+    assert coflows[0].arrival_ms == 100
+    assert list(coflows[0].mappers) == [5, 9]
+    assert list(coflows[0].reducers) == [3, 7]
+    np.testing.assert_allclose(coflows[0].reducer_mb, [12.5, 4.0])
+    assert coflows[1].reducer_mb[0] == 9.75
+
+
+def test_synthetic_trace_shape_and_determinism():
+    t1 = synthesize_facebook_like(seed=7)
+    t2 = synthesize_facebook_like(seed=7)
+    assert len(t1) == 526
+    np.testing.assert_allclose(t1[10].reducer_mb, t2[10].reducer_mb)
+    arrivals = np.array([c.arrival_ms for c in t1])
+    assert np.all(np.diff(arrivals) >= 0)
+    # Heavy tail: max coflow size >> median.
+    sizes = np.array([c.reducer_mb.sum() for c in t1])
+    assert sizes.max() > 20 * np.median(sizes)
+
+
+def test_to_demands_conserves_receiver_totals():
+    t = synthesize_facebook_like(num_coflows=20, num_machines=30, seed=1)
+    port_map = {m: m for m in range(30)}
+    rng = np.random.default_rng(0)
+    demands = to_demands(t, port_map, 30, rng)
+    for cf, mat in zip(t, demands):
+        np.testing.assert_allclose(
+            mat.sum(), cf.reducer_mb.sum(), rtol=1e-9
+        )
+        # Receiver column totals match the trace.
+        for rid, mb in zip(cf.reducers, cf.reducer_mb):
+            np.testing.assert_allclose(mat[:, rid].sum(), mb, rtol=1e-9)
+
+
+def test_sample_instance_paper_defaults():
+    inst = paper_default_instance(seed=0)
+    assert inst.num_coflows == 100
+    assert inst.num_ports == 10
+    assert inst.num_cores == 3
+    assert inst.aggregate_rate == 60.0
+    assert inst.delta == 8.0
+    assert (inst.demands.sum(axis=(1, 2)) > 0).all()
+
+
+def test_sample_instance_trace_releases():
+    inst = sample_instance(seed=3, release="trace")
+    assert (inst.releases >= 0).all()
+    assert inst.releases.max() > 0
