@@ -1,22 +1,17 @@
-"""Shared benchmark harness utilities."""
+"""Shared benchmark harness utilities.
+
+Result persistence lives in `repro.experiments.results`; this module
+re-exports `save_json` for the benches that predate the ensemble engine
+and keeps the small per-instance helpers used by fig4/table3/eps.
+"""
 
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import numpy as np
 
-RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
-
-
-def save_json(name: str, payload):
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    path = os.path.join(RESULTS_DIR, f"{name}.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-    return path
+from repro.experiments.results import results_dir, save_json  # noqa: F401
 
 
 def timed(fn, *args, **kwargs):

@@ -1,39 +1,31 @@
 """Paper Fig. 3: normalized total weighted CCT and tail CCT (p95/p99) under
-the default setting (N=10, M=100, K=3, rates [10,20,30], delta=8)."""
+the default setting (N=10, M=100, K=3, rates [10,20,30], delta=8).
+
+The seed ensemble goes through `repro.experiments.sweep`: one batched LP
+solve for all seeds, then per-instance allocation + circuit scheduling.
+"""
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import normw, quantile_cct, run_all_schemes, save_json
+from repro.experiments import group_mean, save_rows, sweep
 from repro.traffic.instances import paper_default_instance
 
 
-def run(seeds=(0, 1, 2), quick=False):
+def run(seeds=(0, 1, 2), quick=False, lp_method="batch"):
     seeds = seeds[:1] if quick else seeds
-    acc = {s: [] for s in ["ours", "wspt_order", "load_only", "sunflow_s", "bvn_s"]}
-    tails = {s: {"p95": [], "p99": []} for s in acc}
-    for seed in seeds:
-        inst = paper_default_instance(seed=seed)
-        results, _ = run_all_schemes(inst)
-        nw = normw(results)
-        for s in acc:
-            acc[s].append(nw[s])
-            for q, key in [(0.95, "p95"), (0.99, "p99")]:
-                tails[s][key].append(
-                    quantile_cct(results[s], q) / quantile_cct(results["ours"], q)
-                )
-    rows = []
-    for s in acc:
-        rows.append(
-            {
-                "scheme": s,
-                "norm_weighted_cct": float(np.mean(acc[s])),
-                "norm_p95": float(np.mean(tails[s]["p95"])),
-                "norm_p99": float(np.mean(tails[s]["p99"])),
-            }
-        )
-    save_json("fig3_default", rows)
+    instances = [paper_default_instance(seed=s) for s in seeds]
+    res = sweep(
+        instances,
+        lp_method=lp_method,
+        lp_iters=800 if quick else 3000,
+        metas=[{"seed": s} for s in seeds],
+    )
+    rows = group_mean(
+        res.rows(),
+        ["scheme"],
+        ["norm_weighted_cct", "norm_p95", "norm_p99"],
+    )
+    save_rows("fig3_default", rows)
     return rows
 
 

@@ -1,36 +1,49 @@
 """Paper Fig. 5: normalized total weighted CCT vs number of ports
-N in {8,12,16,24,32} for K=3,4,5 (M=100, delta=8)."""
+N in {8,12,16,24,32} for K=3,4,5 (M=100, delta=8).
+
+The whole (K, N) grid is one ensemble: `repro.experiments.sweep` buckets
+the instances by padded shape (same M, one bucket per padded port count)
+and solves each bucket's ordering LP in a single batched program.
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import normw, run_all_schemes, save_json
 from benchmarks.fig4_cdf import RATES
+from repro.experiments import save_rows, sweep
 from repro.traffic.instances import sample_instance
 
 PORTS = (8, 12, 16, 24, 32)
 
 
-def run(quick=False):
+def run(quick=False, lp_method="batch"):
     ports = PORTS[::2] if quick else PORTS
     ks = [3] if quick else [3, 4, 5]
-    rows = []
+    instances, metas = [], []
     for K in ks:
         rates = RATES[K]["imbalanced"]
         for N in ports:
-            inst = sample_instance(num_ports=N, rates=rates, seed=0)
-            results, _ = run_all_schemes(inst)
-            nw = normw(results)
-            rows.append(
-                {
-                    "K": K,
-                    "N": N,
-                    "WSPT": nw["wspt_order"],
-                    "LOAD": nw["load_only"],
-                    "SUN": nw["sunflow_s"],
-                    "BvN": nw["bvn_s"],
-                }
-            )
-    save_json("fig5_ports", rows)
+            instances.append(sample_instance(num_ports=N, rates=rates, seed=0))
+            metas.append({"K": K, "N": N})
+    res = sweep(
+        instances,
+        lp_method=lp_method,
+        lp_iters=800 if quick else 3000,
+        metas=metas,
+    )
+    rows = []
+    for rec in res.records:
+        nw = rec.normalized()
+        rows.append(
+            {
+                "K": rec.meta["K"],
+                "N": rec.meta["N"],
+                "WSPT": nw["wspt_order"],
+                "LOAD": nw["load_only"],
+                "SUN": nw["sunflow_s"],
+                "BvN": nw["bvn_s"],
+            }
+        )
+    save_rows("fig5_ports", rows)
     return rows
 
 

@@ -2,13 +2,18 @@
 reconfiguration delays, zero vs arbitrary release, K=3,4,5.
 
 The paper reports ratios mostly within 2.5-5.0 — far below the 8K/(8K+1)
-worst-case guarantees."""
+worst-case guarantees.
+
+Runs through `repro.experiments.sweep` with ``lp_method="exact"`` and
+``certify=True``: the ratio needs a true LP *lower bound* (the batched
+subgradient objective upper-bounds the LP optimum), and certification
+checks the Lemma 2-4 / Theorem 1 chain under both disciplines.
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import save_json
 from benchmarks.fig4_cdf import RATES
-from repro.core import lp, scheduler, theory
+from repro.experiments import save_rows, sweep
 from repro.traffic.instances import sample_instance
 
 DELTAS = (2.0, 4.0, 6.0, 8.0, 10.0, 12.0)
@@ -17,43 +22,40 @@ DELTAS = (2.0, 4.0, 6.0, 8.0, 10.0, 12.0)
 def run(quick=False):
     deltas = DELTAS[1::3] if quick else DELTAS
     ks = [3] if quick else [3, 4, 5]
-    rows = []
+    instances, metas = [], []
     for K in ks:
         rates = RATES[K]["imbalanced"]
         for delta in deltas:
             for release in ("zero", "trace"):
-                inst = sample_instance(
-                    rates=rates, delta=delta, seed=0, release=release
+                instances.append(
+                    sample_instance(
+                        rates=rates, delta=delta, seed=0, release=release
+                    )
                 )
-                sol = lp.solve_exact(inst)
-                # Practical ratio: greedy discipline (best aggregate CCT).
-                res = scheduler.run(inst, "ours", lp_solution=sol)
-                rep = theory.certify(
-                    inst, res.order, sol.completion, res.allocation, res.ccts
-                )
-                # Certification: reserving discipline (the reading under
-                # which the paper's per-coflow chain provably holds —
-                # theory.py module docstring).
-                res_r = scheduler.run(
-                    inst, "ours", lp_solution=sol, discipline="reserving"
-                )
-                rep_r = theory.certify(
-                    inst, res_r.order, sol.completion, res_r.allocation,
-                    res_r.ccts,
-                )
-                rows.append(
-                    {
-                        "K": K,
-                        "delta": delta,
-                        "release": release,
-                        "ratio": rep.approx_ratio,
-                        "ratio_reserving": rep_r.approx_ratio,
-                        "bound": rep.bound,
-                        "certified_reserving": rep_r.ok(),
-                        "within_bound": rep.approx_ratio <= rep.bound,
-                    }
-                )
-    save_json("fig6_ratio", rows)
+                metas.append({"K": K, "delta": delta, "release": release})
+    res = sweep(
+        instances,
+        schemes=("ours",),
+        lp_method="exact",
+        certify=True,
+        metas=metas,
+    )
+    rows = []
+    for rec in res.records:
+        rep, rep_r = rec.cert_greedy, rec.cert_reserving
+        rows.append(
+            {
+                "K": rec.meta["K"],
+                "delta": rec.meta["delta"],
+                "release": rec.meta["release"],
+                "ratio": rep.approx_ratio,
+                "ratio_reserving": rep_r.approx_ratio,
+                "bound": rep.bound,
+                "certified_reserving": rep_r.ok(),
+                "within_bound": rep.approx_ratio <= rep.bound,
+            }
+        )
+    save_rows("fig6_ratio", rows)
     return rows
 
 

@@ -1,4 +1,5 @@
-"""Micro-benchmarks: scheduler stages, LP solvers, Pallas kernel oracles."""
+"""Micro-benchmarks: scheduler stages, LP solvers, Pallas kernel oracles,
+and the batched LP-ensemble engine vs the sequential per-instance loop."""
 
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ from repro.core import lp
 from repro.core.allocation import allocate
 from repro.core.ordering import wspt_order
 from repro.core.scheduler import run as run_scheme
-from repro.traffic.instances import paper_default_instance
+from repro.traffic.instances import paper_default_instance, random_instance
 
 
 def _time(fn, reps=3):
@@ -22,6 +23,51 @@ def _time(fn, reps=3):
     for _ in range(reps):
         fn()
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_lp_ensemble(quick=False, ensemble_size=32, iters=None):
+    """Batched LP-ensemble engine vs the sequential per-instance loop.
+
+    Models exactly the work a figure sweep does: a cold run over a
+    mixed-shape ensemble (every sweep point samples its own M and N).  The
+    sequential loop — what the benchmarks did before the engine — pays one
+    XLA compile per distinct instance shape on top of the per-instance
+    solves; the engine pads the ensemble into a single bucket and runs one
+    batched program.  Both paths run the same solver with the same
+    iteration count, from a cleared compile cache.
+    """
+    import jax as _jax
+
+    from repro.experiments import solve_ensemble_lp
+
+    B = 8 if quick else ensemble_size
+    iters = iters or (200 if quick else 400)
+    rng = np.random.default_rng(0)
+    ens = [
+        random_instance(
+            num_coflows=int(rng.integers(20, 52)),
+            num_ports=int(rng.integers(4, 12)),
+            seed=s,
+        )
+        for s in range(B)
+    ]
+
+    _jax.clear_caches()
+    t0 = time.perf_counter()
+    sols_seq = [lp.solve_subgradient(inst, iters=iters) for inst in ens]
+    t_seq = time.perf_counter() - t0
+
+    _jax.clear_caches()
+    t0 = time.perf_counter()
+    sols_bat = solve_ensemble_lp(
+        ens, iters=iters, m_quantum=None, p_quantum=None
+    )
+    t_bat = time.perf_counter() - t0
+    gap = max(
+        abs(a.objective - b.objective) / abs(a.objective)
+        for a, b in zip(sols_seq, sols_bat)
+    )
+    return B, t_seq, t_bat, t_seq / t_bat, gap
 
 
 def run(quick=False):
@@ -42,8 +88,15 @@ def run(quick=False):
         )
     )
 
+    # Batched LP-ensemble engine vs sequential loop.
+    B, t_seq, t_bat, speedup, gap = bench_lp_ensemble(quick=quick)
+    rows.append((f"lp_sequential_ensemble{B}", t_seq * 1e6))
+    rows.append((f"lp_batch_ensemble{B}", t_bat * 1e6))
+    rows.append(("lp_batch_speedup_x", speedup))
+    rows.append(("lp_batch_objective_gap", gap))
+
     # Kernel oracles (interpret mode on CPU).
-    from repro.kernels.lp_terms import lp_terms
+    from repro.kernels.lp_terms import lp_terms, lp_terms_batch
     from repro.kernels.port_stats import port_stats
 
     d = jnp.asarray(inst.demands, jnp.float32)
@@ -63,15 +116,30 @@ def run(quick=False):
             ),
         )
     )
+    Bk = 4 if quick else 8
+    Xb = jnp.broadcast_to(X, (Bk, M, M))
+    rhob = jnp.broadcast_to(rho, (Bk,) + rho.shape)
+    scales = jnp.full((Bk,), 1 / 60.0, jnp.float32)
+    doks = jnp.full((Bk,), 8 / 3.0, jnp.float32)
+    rows.append(
+        (
+            f"lp_terms_batch_kernel_B{Bk}",
+            _time(
+                lambda: jax.block_until_ready(
+                    lp_terms_batch(Xb, rhob, rhob, scales, doks)
+                )
+            ),
+        )
+    )
     save_json("micro", dict(rows))
     return rows
 
 
 def main(quick=False):
     rows = run(quick=quick)
-    print("micro: name,us_per_call")
-    for name, us in rows:
-        print(f"micro,{name},{us:.1f}")
+    print("micro: name,value (us_per_call unless suffixed)")
+    for name, val in rows:
+        print(f"micro,{name},{val:.6g}")
     return rows
 
 

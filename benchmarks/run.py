@@ -1,26 +1,19 @@
 """Benchmark runner: one module per paper table/figure + framework benches.
 
-Prints CSV rows (``<bench>,<fields...>``) and saves JSON into
-results/benchmarks/.  ``--quick`` shrinks sweeps for CI-speed runs.
+The figure reproductions (fig3/fig5/fig6) are shells over the
+`repro.experiments` ensemble engine: each builds its instance ensemble,
+runs one `sweep()` with a shared (batched or exact) LP phase, and exports
+flat rows.  Results land as JSON + CSV under ``REPRO_RESULTS`` (default
+``results/benchmarks/``).  ``--quick`` shrinks sweeps for CI-speed runs.
 """
 
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument(
-        "--only",
-        default=None,
-        help="comma-separated subset: fig3,fig4,table3,fig5,fig6,eps,micro,planner",
-    )
-    args = ap.parse_args(argv)
-
+def _benches():
     from benchmarks import (
         eps_variant,
         fig3_default,
@@ -33,7 +26,7 @@ def main(argv=None):
         table3_delta,
     )
 
-    benches = {
+    return {
         "fig3": fig3_default.main,
         "fig4": fig4_cdf.main,
         "table3": table3_delta.main,
@@ -44,16 +37,50 @@ def main(argv=None):
         "planner": planner_gain.main,
         "localsearch": localsearch_gain.main,
     }
-    chosen = (
-        {k: benches[k] for k in args.only.split(",")} if args.only else benches
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset: fig3,fig4,table3,fig5,fig6,eps,micro,"
+        "planner,localsearch",
     )
+    ap.add_argument(
+        "--list", action="store_true", help="list benchmark names and exit"
+    )
+    args = ap.parse_args(argv)
+
+    benches = _benches()
+    if args.list:
+        for name in benches:
+            print(name)
+        return
+    if args.only:
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in benches]
+        if unknown:
+            ap.error(
+                f"unknown benchmark(s) {', '.join(unknown)}; "
+                f"choose from: {', '.join(benches)}"
+            )
+        chosen = {n: benches[n] for n in names}
+    else:
+        chosen = benches
     t0 = time.perf_counter()
     for name, fn in chosen.items():
         print(f"### {name}", flush=True)
         t = time.perf_counter()
         fn(quick=args.quick)
         print(f"### {name} done in {time.perf_counter()-t:.1f}s\n", flush=True)
-    print(f"all benchmarks done in {time.perf_counter()-t0:.1f}s")
+    from repro.experiments import results
+
+    print(
+        f"all benchmarks done in {time.perf_counter()-t0:.1f}s "
+        f"(results in {results.results_dir()}/)"
+    )
 
 
 if __name__ == "__main__":

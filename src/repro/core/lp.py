@@ -10,9 +10,15 @@ with x_{m,m'} + x_{m',m} = 1.  Constraints per coflow m and port p:
 Objective: min sum_m w_m T_m.  The optimum lower-bounds the optimal weighted
 CCT of the original problem, and the optimal T~_m define the global order.
 
-Two solvers:
+Three solvers:
   * solve_exact       — scipy/HiGHS on the reduced LP (x_{m',m} = 1 - x_{m,m'}
                         for m < m' eliminated); exact, used for certificates.
+  * solve_subgradient_batch — ensemble solver: pads a batch of instances to a
+                        shared bucket shape and runs the projected-subgradient
+                        iteration vectorized over the leading ensemble axis
+                        (padded coflows/ports masked out of the max terms and
+                        the objective).  The per-step (B, Mp, Mp) @ (B, Mp, Pp)
+                        contractions are the `lp_terms_batch` kernel's shape.
   * solve_subgradient — pure-JAX projected subgradient on the equivalent
                         convex piecewise-linear program
                             min_Y  F(Y) = sum_m w_m T_m(Y),
@@ -30,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Sequence
 
 import numpy as np
 import scipy.sparse as sp
@@ -40,7 +47,13 @@ import jax.numpy as jnp
 
 from repro.core.coflow import CoflowInstance, port_stats
 
-__all__ = ["LPSolution", "solve_exact", "solve_subgradient", "lp_objective"]
+__all__ = [
+    "LPSolution",
+    "solve_exact",
+    "solve_subgradient",
+    "solve_subgradient_batch",
+    "lp_objective",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -273,6 +286,35 @@ def _subgradient_run(
     return best_Y, T_best, best_F, hist
 
 
+def _warm_start_Y0(
+    instance: CoflowInstance, warm_start_order: np.ndarray | None
+) -> np.ndarray:
+    """Strict-upper-triangular warm start from a priority order.
+
+    Defaults to the weighted global lower-bound order (WSPT-like);
+    Y0[a, b] = 1 iff a precedes b, kept only for a < b.
+    """
+    M = instance.num_coflows
+    if warm_start_order is None:
+        score = instance.weights / np.maximum(instance.global_lower_bound(), 1e-12)
+        warm_start_order = np.argsort(-score, kind="stable")
+    pos = np.empty(M, dtype=np.int64)
+    pos[warm_start_order] = np.arange(M)
+    Y0 = (pos[:, None] < pos[None, :]).astype(np.float32)  # x_ab=1 iff a first
+    return np.triu(Y0, k=1)
+
+
+def _precedence_from_Y(Y: np.ndarray) -> np.ndarray:
+    """Full precedence matrix (diag 0, x_ab + x_ba = 1) from the solver's
+    strict-upper-triangular Y."""
+    M = Y.shape[0]
+    x = np.zeros((M, M))
+    iu = np.triu_indices(M, k=1)
+    x[iu] = Y[iu]
+    x[(iu[1], iu[0])] = 1.0 - Y[iu]
+    return x
+
+
 def solve_subgradient(
     instance: CoflowInstance,
     iters: int = 3000,
@@ -287,14 +329,7 @@ def solve_subgradient(
     """
     M = instance.num_coflows
     rho, tau = port_stats(instance.demands)
-    if warm_start_order is None:
-        # Warm start from the weighted global lower-bound order (WSPT-like).
-        score = instance.weights / np.maximum(instance.global_lower_bound(), 1e-12)
-        warm_start_order = np.argsort(-score, kind="stable")
-    pos = np.empty(M, dtype=np.int64)
-    pos[warm_start_order] = np.arange(M)
-    Y0 = (pos[:, None] < pos[None, :]).astype(np.float32)  # x_ab=1 iff a first
-    Y0 = np.triu(Y0, k=1)
+    Y0 = _warm_start_Y0(instance, warm_start_order)
 
     best_Y, T_best, best_F, _ = _subgradient_run(
         jnp.asarray(Y0, dtype=jnp.float32),
@@ -306,15 +341,227 @@ def solve_subgradient(
         inv_R=float(1.0 / instance.aggregate_rate),
         delta_over_K=float(instance.delta / instance.num_cores),
     )
-    Y = np.asarray(best_Y, dtype=np.float64)
-    x = np.zeros((M, M))
-    iu = np.triu_indices(M, k=1)
-    x[iu] = Y[iu]
-    x[(iu[1], iu[0])] = 1.0 - Y[iu]
     return LPSolution(
         completion=np.asarray(T_best, dtype=np.float64),
-        precedence=x,
+        precedence=_precedence_from_Y(np.asarray(best_Y, dtype=np.float64)),
         objective=float(best_F),
         method="subgradient",
         iterations=iters,
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched (ensemble) JAX solver
+# ---------------------------------------------------------------------------
+
+
+def _completion_from_Y_masked(
+    Y: jnp.ndarray,
+    p_rho: jnp.ndarray,
+    p_tau: jnp.ndarray,
+    releases: jnp.ndarray,
+    inv_R: jnp.ndarray,
+    delta_over_K: jnp.ndarray,
+    coflow_mask: jnp.ndarray,
+    port_mask: jnp.ndarray,
+    temp: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Shape-padded T_m(Y) for one ensemble member (vmapped over B).
+
+    Identical math to `_completion_from_Y` on the real (M, 2N) block:
+    padded coflow rows/columns of X are zeroed (their T comes out exactly 0
+    and their weight is 0), and padded port columns are masked to -inf so
+    they contribute neither to the hard max nor to the smoothed logsumexp.
+    """
+    M = Y.shape[0]
+    iu = jnp.triu(jnp.ones((M, M), dtype=bool), k=1)
+    il = jnp.tril(jnp.ones((M, M), dtype=bool), k=-1)
+    X = jnp.where(iu, Y, 0.0) + jnp.where(il, 1.0 - Y.T, 0.0)
+    X = X + jnp.eye(M, dtype=Y.dtype)
+    X = X * (coflow_mask[:, None] * coflow_mask[None, :])
+    load = (X.T @ p_rho) * inv_R  # (Mp, Pp) — lp_terms_batch's contraction
+    rec = (X.T @ p_tau) * delta_over_K
+    stacked = jnp.concatenate([load, rec, releases[:, None]], axis=1)
+    col_mask = jnp.concatenate(
+        [port_mask, port_mask, jnp.ones((1,), dtype=bool)]
+    )
+    neg = jnp.asarray(-jnp.inf, stacked.dtype)
+    if temp is None:
+        return jnp.where(col_mask, stacked, neg).max(axis=1)
+    z = jnp.where(col_mask, stacked / temp, neg)
+    return temp * jax.scipy.special.logsumexp(z, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "lr"))
+def _subgradient_run_batch(
+    Y0: jnp.ndarray,  # (B, Mp, Mp)
+    p_rho: jnp.ndarray,  # (B, Mp, Pp)
+    p_tau: jnp.ndarray,  # (B, Mp, Pp)
+    weights: jnp.ndarray,  # (B, Mp), 0 on padded coflows
+    releases: jnp.ndarray,  # (B, Mp)
+    inv_R: jnp.ndarray,  # (B,)
+    delta_over_K: jnp.ndarray,  # (B,)
+    coflow_mask: jnp.ndarray,  # (B, Mp) bool
+    port_mask: jnp.ndarray,  # (B, Pp) bool
+    *,
+    iters: int,
+    lr: float = 0.05,
+):
+    """Ensemble projected Adam: the whole batch advances in lockstep.
+
+    Instances are independent, so the gradient of the *summed* smooth
+    objective is exactly the stack of per-instance gradients; Adam is
+    elementwise, so each member follows the same trajectory it would in
+    `_subgradient_run`.  Per-instance best-so-far is tracked under the true
+    piecewise-linear objective.
+    """
+
+    comp_hard = jax.vmap(
+        lambda Y, r, t, rel, ir, dk, cm, pm: _completion_from_Y_masked(
+            Y, r, t, rel, ir, dk, cm, pm
+        )
+    )
+    comp_smooth = jax.vmap(
+        lambda Y, r, t, rel, ir, dk, cm, pm, tp: _completion_from_Y_masked(
+            Y, r, t, rel, ir, dk, cm, pm, temp=tp
+        )
+    )
+
+    def true_objective(Y):  # (B,)
+        T = comp_hard(
+            Y, p_rho, p_tau, releases, inv_R, delta_over_K,
+            coflow_mask, port_mask,
+        )
+        return jnp.sum(weights * T, axis=1)
+
+    def smooth_total(Y, temps):  # scalar — sum over the ensemble
+        T = comp_smooth(
+            Y, p_rho, p_tau, releases, inv_R, delta_over_K,
+            coflow_mask, port_mask, temps,
+        )
+        return jnp.sum(weights * T)
+
+    grad_fn = jax.grad(smooth_total)
+    T0 = comp_hard(
+        Y0, p_rho, p_tau, releases, inv_R, delta_over_K,
+        coflow_mask, port_mask,
+    )
+    temp0 = jnp.maximum(jnp.max(T0, axis=1) * 0.05, 1e-3)  # (B,)
+
+    def step(carry, t):
+        Y, m, v, best_Y, best_F = carry
+        temps = temp0 * jnp.exp(-4.0 * t / iters) + 1e-3
+        g = grad_fn(Y, temps)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1.0 - 0.9 ** (t + 1.0))
+        vh = v / (1.0 - 0.999 ** (t + 1.0))
+        Y = jnp.clip(Y - lr * mh / (jnp.sqrt(vh) + 1e-8), 0.0, 1.0)
+        F = true_objective(Y)
+        better = F < best_F
+        return (
+            Y,
+            m,
+            v,
+            jnp.where(better[:, None, None], Y, best_Y),
+            jnp.where(better, F, best_F),
+        ), F
+
+    init = (Y0, jnp.zeros_like(Y0), jnp.zeros_like(Y0), Y0, true_objective(Y0))
+    (_, _, _, best_Y, best_F), hist = jax.lax.scan(
+        step, init, jnp.arange(iters, dtype=jnp.float32)
+    )
+    T_best = comp_hard(
+        best_Y, p_rho, p_tau, releases, inv_R, delta_over_K,
+        coflow_mask, port_mask,
+    )
+    return best_Y, T_best, best_F, hist
+
+
+def solve_subgradient_batch(
+    instances: Sequence[CoflowInstance],
+    iters: int = 3000,
+    warm_start_orders: Sequence[np.ndarray | None] | None = None,
+    pad_coflows: int | None = None,
+    pad_ports: int | None = None,
+) -> list[LPSolution]:
+    """Solve the ordering LP for a whole ensemble in one vectorized program.
+
+    Instances are zero-padded to a shared bucket shape (``pad_coflows``
+    coflows x ``pad_ports`` flat ports, defaulting to the ensemble maxima)
+    and the projected-subgradient iteration runs batched over the leading
+    ensemble axis — the per-step (B, Mp, Mp) @ (B, Mp, Pp) contractions are
+    exactly the `lp_terms_batch` kernel's shape.  Padded coflows and ports
+    are masked out of the max terms and carry zero weight, so each member's
+    trajectory matches what `solve_subgradient` computes for it alone (up
+    to f32 reduction-order noise).
+
+    Returns one `LPSolution` per instance, in input order.
+    """
+    instances = list(instances)
+    if not instances:
+        return []
+    B = len(instances)
+    if warm_start_orders is None:
+        warm_start_orders = [None] * B
+    Ms = [inst.num_coflows for inst in instances]
+    Ps = [2 * inst.num_ports for inst in instances]
+    Mp = pad_coflows if pad_coflows is not None else max(Ms)
+    Pp = pad_ports if pad_ports is not None else max(Ps)
+    if Mp < max(Ms) or Pp < max(Ps):
+        raise ValueError(
+            f"bucket shape ({Mp}, {Pp}) too small for ensemble maxima "
+            f"({max(Ms)}, {max(Ps)})"
+        )
+
+    Y0 = np.zeros((B, Mp, Mp), dtype=np.float32)
+    p_rho = np.zeros((B, Mp, Pp), dtype=np.float32)
+    p_tau = np.zeros((B, Mp, Pp), dtype=np.float32)
+    weights = np.zeros((B, Mp), dtype=np.float32)
+    releases = np.zeros((B, Mp), dtype=np.float32)
+    inv_R = np.zeros(B, dtype=np.float32)
+    delta_over_K = np.zeros(B, dtype=np.float32)
+    coflow_mask = np.zeros((B, Mp), dtype=bool)
+    port_mask = np.zeros((B, Pp), dtype=bool)
+    for b, inst in enumerate(instances):
+        M, P = Ms[b], Ps[b]
+        rho, tau = port_stats(inst.demands)
+        p_rho[b, :M, :P] = rho
+        p_tau[b, :M, :P] = tau
+        weights[b, :M] = inst.weights
+        releases[b, :M] = inst.releases
+        inv_R[b] = 1.0 / inst.aggregate_rate
+        delta_over_K[b] = inst.delta / inst.num_cores
+        coflow_mask[b, :M] = True
+        port_mask[b, :P] = True
+        Y0[b, :M, :M] = _warm_start_Y0(inst, warm_start_orders[b])
+
+    best_Y, T_best, best_F, _ = _subgradient_run_batch(
+        jnp.asarray(Y0),
+        jnp.asarray(p_rho),
+        jnp.asarray(p_tau),
+        jnp.asarray(weights),
+        jnp.asarray(releases),
+        jnp.asarray(inv_R),
+        jnp.asarray(delta_over_K),
+        jnp.asarray(coflow_mask),
+        jnp.asarray(port_mask),
+        iters=iters,
+    )
+    best_Y = np.asarray(best_Y, dtype=np.float64)
+    T_best = np.asarray(T_best, dtype=np.float64)
+    best_F = np.asarray(best_F, dtype=np.float64)
+
+    out = []
+    for b, inst in enumerate(instances):
+        M = Ms[b]
+        out.append(
+            LPSolution(
+                completion=T_best[b, :M],
+                precedence=_precedence_from_Y(best_Y[b, :M, :M]),
+                objective=float(best_F[b]),
+                method="subgradient_batch",
+                iterations=iters,
+            )
+        )
+    return out

@@ -1,0 +1,36 @@
+"""Ensemble experiments: batched LP sweeps over instance collections.
+
+The figure reproductions (benchmarks/fig*.py) are thin shells over this
+package: `ensemble` buckets instances by padded shape and solves the
+ordering LP for each bucket in one batched program, `sweep` drives the
+full order -> allocate -> schedule pipeline per instance on top of the
+shared LP phase, and `results` persists flat rows as JSON + CSV.
+"""
+
+from repro.experiments.ensemble import (
+    Bucket,
+    bucket_shape,
+    build_buckets,
+    solve_ensemble_lp,
+)
+from repro.experiments.results import group_mean, save_json, save_rows
+from repro.experiments.sweep import (
+    DEFAULT_SCHEMES,
+    InstanceRecord,
+    SweepResult,
+    sweep,
+)
+
+__all__ = [
+    "Bucket",
+    "bucket_shape",
+    "build_buckets",
+    "solve_ensemble_lp",
+    "group_mean",
+    "save_json",
+    "save_rows",
+    "DEFAULT_SCHEMES",
+    "InstanceRecord",
+    "SweepResult",
+    "sweep",
+]

@@ -10,11 +10,21 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 # TPU tiling constants: (sublane, lane) min tile for f32 is (8, 128); MXU
 # native matmul tile is 128x128.
 SUBLANE = 8
 LANE = 128
+
+# jax renamed pltpu.TPUCompilerParams -> CompilerParams and moved the
+# scratch-shape constructors under pltpu.MemorySpace; resolve whichever this
+# install provides so the kernels run on both sides of the rename.
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+if hasattr(pltpu, "MemorySpace"):
+    VMEM_SCRATCH = pltpu.MemorySpace.VMEM
+else:  # pragma: no cover - depends on installed jax
+    VMEM_SCRATCH = pltpu.VMEM
 
 
 def use_interpret() -> bool:

@@ -1,3 +1,8 @@
-from repro.kernels.lp_terms.ops import lp_terms, lp_terms_ref
+from repro.kernels.lp_terms.ops import (
+    lp_terms,
+    lp_terms_batch,
+    lp_terms_batch_ref,
+    lp_terms_ref,
+)
 
-__all__ = ["lp_terms", "lp_terms_ref"]
+__all__ = ["lp_terms", "lp_terms_ref", "lp_terms_batch", "lp_terms_batch_ref"]

@@ -1,13 +1,13 @@
-"""Jit'd public wrapper for the lp_terms kernel."""
+"""Jit'd public wrappers for the lp_terms kernels (single and batched)."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.lp_terms.kernel import lp_terms_pallas
-from repro.kernels.lp_terms.ref import lp_terms_ref
+from repro.kernels.lp_terms.kernel import lp_terms_batch_pallas, lp_terms_pallas
+from repro.kernels.lp_terms.ref import lp_terms_batch_ref, lp_terms_ref
 
-__all__ = ["lp_terms", "lp_terms_ref"]
+__all__ = ["lp_terms", "lp_terms_ref", "lp_terms_batch", "lp_terms_batch_ref"]
 
 
 def lp_terms(
@@ -21,3 +21,17 @@ def lp_terms(
     if use_kernel:
         return lp_terms_pallas(x, p_rho, p_tau, inv_R, delta_over_K)
     return lp_terms_ref(x, p_rho, p_tau, inv_R, delta_over_K)
+
+
+def lp_terms_batch(
+    x: jnp.ndarray,
+    p_rho: jnp.ndarray,
+    p_tau: jnp.ndarray,
+    inv_R: jnp.ndarray,
+    delta_over_K: jnp.ndarray,
+    use_kernel: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Ensemble LP terms: x (B, M, M), p_rho/p_tau (B, M, P), scales (B,)."""
+    if use_kernel:
+        return lp_terms_batch_pallas(x, p_rho, p_tau, inv_R, delta_over_K)
+    return lp_terms_batch_ref(x, p_rho, p_tau, inv_R, delta_over_K)

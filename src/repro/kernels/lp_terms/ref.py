@@ -26,3 +26,24 @@ def lp_terms_ref(
     load = xf.T @ p_rho.astype(jnp.float32)
     rec = xf.T @ p_tau.astype(jnp.float32)
     return load.max(axis=1) * inv_R, rec.max(axis=1) * delta_over_K
+
+
+def lp_terms_batch_ref(
+    x: jnp.ndarray,
+    p_rho: jnp.ndarray,
+    p_tau: jnp.ndarray,
+    inv_R: jnp.ndarray,
+    delta_over_K: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched oracle over an ensemble of instances.
+
+    x: (B, M, M) with diag 1; p_rho/p_tau: (B, M, P); inv_R/delta_over_K:
+    (B,) per-instance scales (R, delta, K vary across the ensemble).
+    Returns ((B, M), (B, M)).
+    """
+    xf = x.astype(jnp.float32)
+    load = jnp.einsum("bqm,bqp->bmp", xf, p_rho.astype(jnp.float32))
+    rec = jnp.einsum("bqm,bqp->bmp", xf, p_tau.astype(jnp.float32))
+    inv_R = jnp.asarray(inv_R, jnp.float32)[:, None]
+    delta_over_K = jnp.asarray(delta_over_K, jnp.float32)[:, None]
+    return load.max(axis=2) * inv_R, rec.max(axis=2) * delta_over_K

@@ -1,7 +1,10 @@
 """Property tests for the intra-core scheduling disciplines' invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import lp, scheduler
 from repro.core.coflow import CoflowInstance

@@ -10,7 +10,12 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from repro.kernels.lp_terms import lp_terms, lp_terms_ref
+from repro.kernels.lp_terms import (
+    lp_terms,
+    lp_terms_batch,
+    lp_terms_batch_ref,
+    lp_terms_ref,
+)
 from repro.kernels.port_stats import port_stats, port_stats_ref
 from repro.kernels.quant import (
     dequantize_flat,
@@ -74,6 +79,83 @@ def test_lp_terms_zero_delta():
     p = jnp.asarray(rng.uniform(0, 5, (M, P)), jnp.float32)
     _, tr = lp_terms(jnp.asarray(X, jnp.float32), p, p, 1.0, 0.0)
     np.testing.assert_allclose(tr, 0.0)
+
+
+# ------------------------------------------------------------ lp_terms batch
+@pytest.mark.parametrize("B,M,P", [(1, 10, 8), (3, 20, 24), (4, 100, 20)])
+def test_lp_terms_batch_sweep(B, M, P):
+    """Batched kernel vs batched oracle vs per-instance oracle, with
+    per-instance scales."""
+    rng = np.random.default_rng(B * 1000 + M + P)
+    Y = np.triu(rng.random((B, M, M)), 1)
+    X = Y + np.tril(1 - np.swapaxes(Y, 1, 2), -1) + np.eye(M)
+    p_rho = rng.uniform(0, 50, (B, M, P)).astype(np.float32)
+    p_tau = rng.integers(0, 10, (B, M, P)).astype(np.float32)
+    inv_R = rng.uniform(0.01, 0.1, B).astype(np.float32)
+    dok = rng.uniform(0.0, 3.0, B).astype(np.float32)
+    args = (
+        jnp.asarray(X, jnp.float32),
+        jnp.asarray(p_rho),
+        jnp.asarray(p_tau),
+        jnp.asarray(inv_R),
+        jnp.asarray(dok),
+    )
+    tl_k, tr_k = lp_terms_batch(*args)
+    tl_r, tr_r = lp_terms_batch_ref(*args)
+    assert tl_k.shape == (B, M) and tr_k.shape == (B, M)
+    np.testing.assert_allclose(tl_k, tl_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(tr_k, tr_r, rtol=1e-4, atol=1e-4)
+    for b in range(B):
+        tl_s, tr_s = lp_terms_ref(
+            jnp.asarray(X[b], jnp.float32),
+            jnp.asarray(p_rho[b]),
+            jnp.asarray(p_tau[b]),
+            float(inv_R[b]),
+            float(dok[b]),
+        )
+        np.testing.assert_allclose(tl_k[b], tl_s, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(tr_k[b], tr_s, rtol=1e-4, atol=1e-4)
+
+
+def test_lp_terms_batch_matches_lp_solver_shape():
+    """The batched kernel consumes exactly the padded arrays the ensemble
+    LP solver builds (zero-padded coflows/ports are harmless: nonnegative
+    stats keep the row max on real columns)."""
+    from repro.core.coflow import port_stats
+    from repro.traffic.instances import random_instance
+
+    ens = [
+        random_instance(num_coflows=6, num_ports=4, seed=0),
+        random_instance(num_coflows=9, num_ports=3, seed=1),
+    ]
+    Mp, Pp = 9, 8
+    B = len(ens)
+    X = np.zeros((B, Mp, Mp), np.float32)
+    rho_p = np.zeros((B, Mp, Pp), np.float32)
+    tau_p = np.zeros((B, Mp, Pp), np.float32)
+    inv_R = np.zeros(B, np.float32)
+    dok = np.zeros(B, np.float32)
+    for b, inst in enumerate(ens):
+        M, P = inst.num_coflows, 2 * inst.num_ports
+        rho, tau = port_stats(inst.demands)
+        rho_p[b, :M, :P] = rho
+        tau_p[b, :M, :P] = tau
+        X[b, :Mp, :Mp] = np.eye(Mp)
+        inv_R[b] = 1.0 / inst.aggregate_rate
+        dok[b] = inst.delta / inst.num_cores
+    tl, tr = lp_terms_batch(
+        jnp.asarray(X), jnp.asarray(rho_p), jnp.asarray(tau_p),
+        jnp.asarray(inv_R), jnp.asarray(dok),
+    )
+    for b, inst in enumerate(ens):
+        M = inst.num_coflows
+        rho, tau = port_stats(inst.demands)
+        np.testing.assert_allclose(
+            np.asarray(tl[b, :M]), rho.max(axis=1) * inv_R[b], rtol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(tr[b, :M]), tau.max(axis=1) * dok[b], rtol=1e-5
+        )
 
 
 # --------------------------------------------------------------- flash attn

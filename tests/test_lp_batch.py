@@ -1,0 +1,134 @@
+"""Parity and masking tests for the batched ordering-LP ensemble engine.
+
+The contract (see core/lp.py and experiments/ensemble.py): within a
+same-shape bucket each ensemble member follows the exact trajectory
+`solve_subgradient` would give it alone, so the bucketed engine matches
+the per-instance solver to f32 round-off; under forced common padding the
+masked trajectories agree up to f32 reduction-order noise (~1e-4).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import lp
+from repro.experiments import build_buckets, solve_ensemble_lp
+from repro.traffic.instances import random_instance
+
+
+def _mixed_ensemble():
+    """Mixed-shape ensemble: unequal M and N across members."""
+    return [
+        random_instance(num_coflows=6, num_ports=4, seed=0),
+        random_instance(num_coflows=10, num_ports=5, seed=1, release_span=20.0),
+        random_instance(num_coflows=6, num_ports=4, seed=10),
+        random_instance(num_coflows=8, num_ports=2, seed=5),
+        random_instance(num_coflows=10, num_ports=5, seed=12, release_span=20.0),
+    ]
+
+
+def test_bucketed_engine_matches_per_instance_solver():
+    """Acceptance: batched objectives match per-instance `solve_subgradient`
+    to <= 1e-5 relative error on a mixed-shape ensemble (exact-shape
+    buckets, the engine's strict-parity mode)."""
+    ens = _mixed_ensemble()
+    iters = 800
+    batch = solve_ensemble_lp(ens, iters=iters, m_quantum=1, p_quantum=1)
+    for inst, sol_b in zip(ens, batch):
+        sol_s = lp.solve_subgradient(inst, iters=iters)
+        rel = abs(sol_b.objective - sol_s.objective) / abs(sol_s.objective)
+        assert rel <= 1e-5, (inst.num_coflows, inst.num_ports, rel)
+        np.testing.assert_allclose(
+            sol_b.completion, sol_s.completion, rtol=1e-4, atol=1e-5
+        )
+        assert sol_b.method == "subgradient_batch"
+
+
+def test_padded_batch_close_and_feasible():
+    """Forced common padding (ensemble maxima): trajectories may drift by
+    f32 reduction-order noise but stay feasible and near the per-instance
+    objective."""
+    ens = _mixed_ensemble()
+    iters = 800
+    batch = lp.solve_subgradient_batch(ens, iters=iters)
+    for inst, sol in zip(ens, batch):
+        M = inst.num_coflows
+        assert sol.completion.shape == (M,)
+        assert sol.precedence.shape == (M, M)
+        # Feasibility: box, pair equalities, release bounds.
+        off = ~np.eye(M, dtype=bool)
+        assert np.all(sol.precedence[off] >= -1e-6)
+        assert np.all(sol.precedence[off] <= 1 + 1e-6)
+        np.testing.assert_allclose(
+            (sol.precedence + sol.precedence.T)[off], 1.0, atol=1e-6
+        )
+        assert np.all(sol.completion >= inst.releases - 1e-3)
+        # Objective consistent with the reported completions.
+        np.testing.assert_allclose(
+            sol.objective,
+            float(np.dot(inst.weights, sol.completion)),
+            rtol=1e-4,
+        )
+        sol_s = lp.solve_subgradient(inst, iters=iters)
+        rel = abs(sol.objective - sol_s.objective) / abs(sol_s.objective)
+        assert rel <= 1e-3, rel
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_batch_close_to_exact(seed):
+    """The batched solver stays within the per-instance solver's tolerance
+    of the exact LP optimum on small instances."""
+    ens = [
+        random_instance(num_coflows=15, num_ports=5, seed=seed),
+        random_instance(num_coflows=10, num_ports=4, seed=seed + 100),
+    ]
+    batch = lp.solve_subgradient_batch(ens, iters=2000)
+    for inst, sol in zip(ens, batch):
+        exact = lp.solve_exact(inst)
+        assert sol.objective >= exact.objective - 1e-3
+        assert sol.objective <= exact.objective * 1.02
+
+
+def test_singleton_ensemble_matches_solver():
+    inst = random_instance(num_coflows=9, num_ports=4, seed=7)
+    (sol_b,) = lp.solve_subgradient_batch([inst], iters=600)
+    sol_s = lp.solve_subgradient(inst, iters=600)
+    rel = abs(sol_b.objective - sol_s.objective) / abs(sol_s.objective)
+    assert rel <= 1e-5
+    np.testing.assert_array_equal(sol_b.order(), sol_s.order())
+
+
+def test_single_coflow_member():
+    """M=1 member inside a padded batch reduces to the global bound."""
+    from repro.core.coflow import port_stats
+
+    ens = [
+        random_instance(num_coflows=1, num_ports=4, seed=2),
+        random_instance(num_coflows=5, num_ports=3, seed=3),
+    ]
+    batch = lp.solve_subgradient_batch(ens, iters=400)
+    inst = ens[0]
+    rho, tau = port_stats(inst.demands)
+    expect = max(
+        rho[0].max() / inst.aggregate_rate,
+        tau[0].max() * inst.delta / inst.num_cores,
+        inst.releases[0],
+    )
+    np.testing.assert_allclose(batch[0].completion[0], expect, rtol=1e-4)
+
+
+def test_empty_ensemble():
+    assert lp.solve_subgradient_batch([]) == []
+
+
+def test_pad_too_small_raises():
+    ens = [random_instance(num_coflows=8, num_ports=4, seed=0)]
+    with pytest.raises(ValueError):
+        lp.solve_subgradient_batch(ens, pad_coflows=4)
+
+
+def test_bucket_pad_shapes_cover_members():
+    ens = _mixed_ensemble()
+    for bucket in build_buckets(ens, m_quantum=8, p_quantum=8):
+        for i in bucket.indices:
+            assert ens[i].num_coflows <= bucket.num_coflows
+            assert 2 * ens[i].num_ports <= bucket.num_flat_ports

@@ -1,7 +1,10 @@
 """Hypothesis property-based tests for the scheduling system's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import lp, scheduler, theory
 from repro.core.coflow import CoflowInstance
