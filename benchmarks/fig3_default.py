@@ -2,7 +2,9 @@
 the default setting (N=10, M=100, K=3, rates [10,20,30], delta=8).
 
 The seed ensemble goes through `repro.experiments.sweep`: one batched LP
-solve for all seeds, then per-instance allocation + circuit scheduling.
+solve for all seeds, then every scheme's `Pipeline.run_batch` with the
+allocation stage vectorized across the ensemble (``alloc="loop"`` keeps
+the per-instance reference path).
 """
 
 from __future__ import annotations
@@ -11,13 +13,14 @@ from repro.experiments import group_mean, save_rows, sweep
 from repro.traffic.instances import paper_default_instance
 
 
-def run(seeds=(0, 1, 2), quick=False, lp_method="batch"):
+def run(seeds=(0, 1, 2), quick=False, lp_method="batch", alloc="batch"):
     seeds = seeds[:1] if quick else seeds
     instances = [paper_default_instance(seed=s) for s in seeds]
     res = sweep(
         instances,
         lp_method=lp_method,
         lp_iters=800 if quick else 3000,
+        alloc=alloc,
         metas=[{"seed": s} for s in seeds],
     )
     rows = group_mean(
@@ -29,8 +32,8 @@ def run(seeds=(0, 1, 2), quick=False, lp_method="batch"):
     return rows
 
 
-def main(quick=False):
-    rows = run(quick=quick)
+def main(quick=False, alloc="batch"):
+    rows = run(quick=quick, alloc=alloc)
     print("fig3_default: scheme,normW,normP95,normP99")
     for r in rows:
         print(

@@ -2,8 +2,10 @@
 N in {8,12,16,24,32} for K=3,4,5 (M=100, delta=8).
 
 The whole (K, N) grid is one ensemble: `repro.experiments.sweep` buckets
-the instances by padded shape (same M, one bucket per padded port count)
-and solves each bucket's ordering LP in a single batched program.
+the instances by padded shape (same M, one bucket per padded port count),
+solves each bucket's ordering LP in a single batched program, and runs
+each scheme's post-LP pipeline batch-first across the grid (the batched
+allocation handles the mixed N *and* mixed K in one padded program).
 """
 
 from __future__ import annotations
@@ -15,7 +17,7 @@ from repro.traffic.instances import sample_instance
 PORTS = (8, 12, 16, 24, 32)
 
 
-def run(quick=False, lp_method="batch"):
+def run(quick=False, lp_method="batch", alloc="batch"):
     ports = PORTS[::2] if quick else PORTS
     ks = [3] if quick else [3, 4, 5]
     instances, metas = [], []
@@ -28,6 +30,7 @@ def run(quick=False, lp_method="batch"):
         instances,
         lp_method=lp_method,
         lp_iters=800 if quick else 3000,
+        alloc=alloc,
         metas=metas,
     )
     rows = []
@@ -47,8 +50,8 @@ def run(quick=False, lp_method="batch"):
     return rows
 
 
-def main(quick=False):
-    rows = run(quick=quick)
+def main(quick=False, alloc="batch"):
+    rows = run(quick=quick, alloc=alloc)
     print("fig5: K,N,WSPT,LOAD,SUN,BvN")
     for r in rows:
         print(

@@ -7,7 +7,9 @@ worst-case guarantees.
 Runs through `repro.experiments.sweep` with ``lp_method="exact"`` and
 ``certify=True``: the ratio needs a true LP *lower bound* (the batched
 subgradient objective upper-bounds the LP optimum), and certification
-checks the Lemma 2-4 / Theorem 1 chain under both disciplines.
+checks the Lemma 2-4 / Theorem 1 chain under both disciplines.  The
+post-LP phases still execute batch-first through the OURS `Pipeline`
+(``alloc="batch"``; the batched allocation is LP-method agnostic).
 """
 
 from __future__ import annotations
@@ -19,7 +21,7 @@ from repro.traffic.instances import sample_instance
 DELTAS = (2.0, 4.0, 6.0, 8.0, 10.0, 12.0)
 
 
-def run(quick=False):
+def run(quick=False, alloc="batch"):
     deltas = DELTAS[1::3] if quick else DELTAS
     ks = [3] if quick else [3, 4, 5]
     instances, metas = [], []
@@ -37,6 +39,7 @@ def run(quick=False):
         instances,
         schemes=("ours",),
         lp_method="exact",
+        alloc=alloc,
         certify=True,
         metas=metas,
     )
@@ -59,8 +62,8 @@ def run(quick=False):
     return rows
 
 
-def main(quick=False):
-    rows = run(quick=quick)
+def main(quick=False, alloc="batch"):
+    rows = run(quick=quick, alloc=alloc)
     print("fig6: K,delta,release,ratio,ratio_reserving,bound,certified_reserving,within_bound")
     for r in rows:
         print(

@@ -1,8 +1,15 @@
 """Micro-benchmarks: scheduler stages, LP solvers, Pallas kernel oracles,
-and the batched LP-ensemble engine vs the sequential per-instance loop."""
+the batched LP-ensemble engine vs the sequential per-instance loop, and
+the batch-first post-LP pipeline (`Pipeline.run_batch`) vs the
+per-instance order -> allocate -> schedule loop.
+
+``python -m benchmarks.micro --batch-smoke`` runs only the pipeline case
+with ``require_batch=True`` (any fallback to the per-instance allocation
+loop is an error) and prints cold/warm timings — the CI smoke step."""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -13,7 +20,7 @@ from benchmarks.common import save_json
 from repro.core import lp
 from repro.core.allocation import allocate
 from repro.core.ordering import wspt_order
-from repro.core.scheduler import run as run_scheme
+from repro.pipeline import get_pipeline
 from repro.traffic.instances import paper_default_instance, random_instance
 
 
@@ -70,10 +77,72 @@ def bench_lp_ensemble(quick=False, ensemble_size=32, iters=None):
     return B, t_seq, t_bat, t_seq / t_bat, gap
 
 
+def bench_pipeline_batch(
+    quick=False, ensemble_size=32, lp_iters=300, require_batch=False
+):
+    """Batch-first post-LP pipeline vs the per-instance scheme loop.
+
+    Post-LP wall time only: the shared LP phase is solved once up front
+    (as a sweep does) and both paths consume the same solutions.  The loop
+    path is `Pipeline.run` per instance — order, NumPy reference
+    allocation, circuit scheduling; the batch path is `Pipeline.run_batch`
+    with the allocation stage vectorized across the mixed-shape ensemble.
+    Reported cold (first call compiles the allocation scan for this padded
+    shape) and warm; results are checked bit-identical to the loop.
+    """
+    from repro.experiments import solve_ensemble_lp
+
+    B = 8 if quick else ensemble_size
+    rng = np.random.default_rng(1)
+    ens = [
+        random_instance(
+            num_coflows=int(rng.integers(20, 52)),
+            num_ports=int(rng.integers(4, 12)),
+            num_cores=int(rng.integers(2, 5)),
+            seed=100 + s,
+        )
+        for s in range(B)
+    ]
+    sols = solve_ensemble_lp(
+        ens, iters=100 if quick else lp_iters, m_quantum=None, p_quantum=None
+    )
+    pipe = get_pipeline("ours")
+
+    t0 = time.perf_counter()
+    res_loop = [
+        pipe.run(inst, lp_solution=sol, validate=False)
+        for inst, sol in zip(ens, sols)
+    ]
+    t_loop = time.perf_counter() - t0
+
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    pipe.run_batch(
+        ens, lp_solutions=sols, validate=False, require_batch=require_batch
+    )
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_warm = pipe.run_batch(
+        ens, lp_solutions=sols, validate=False, require_batch=require_batch
+    )
+    t_warm = time.perf_counter() - t0
+
+    mismatch = max(
+        abs(a.total_weighted_cct - b.total_weighted_cct)
+        for a, b in zip(res_loop, res_warm)
+    )
+    if mismatch != 0.0:
+        raise AssertionError(
+            f"run_batch diverged from the per-instance loop by {mismatch}"
+        )
+    return B, t_loop, t_cold, t_warm
+
+
 def run(quick=False):
     rows = []
     inst = paper_default_instance(seed=0)
     sol = lp.solve_exact(inst)
+    pipe_ours = get_pipeline("ours")
 
     rows.append(("lp_exact_M100", _time(lambda: lp.solve_exact(inst), 1)))
     rows.append(
@@ -84,7 +153,7 @@ def run(quick=False):
     rows.append(
         (
             "full_ours_M100",
-            _time(lambda: run_scheme(inst, "ours", lp_solution=sol), 1),
+            _time(lambda: pipe_ours.run(inst, lp_solution=sol), 1),
         )
     )
 
@@ -94,6 +163,14 @@ def run(quick=False):
     rows.append((f"lp_batch_ensemble{B}", t_bat * 1e6))
     rows.append(("lp_batch_speedup_x", speedup))
     rows.append(("lp_batch_objective_gap", gap))
+
+    # Batch-first post-LP pipeline vs the per-instance scheme loop
+    # (whole-ensemble seconds, same names/units as the --batch-smoke log).
+    Bp, t_loop, t_cold, t_warm = bench_pipeline_batch(quick=quick)
+    rows.append((f"pipeline_loop_ensemble{Bp}_s", t_loop))
+    rows.append((f"pipeline_batch_cold_ensemble{Bp}_s", t_cold))
+    rows.append((f"pipeline_batch_warm_ensemble{Bp}_s", t_warm))
+    rows.append(("pipeline_batch_speedup_x", t_loop / t_warm))
 
     # Kernel oracles (interpret mode on CPU).
     from repro.kernels.lp_terms import lp_terms, lp_terms_batch
@@ -135,6 +212,23 @@ def run(quick=False):
     return rows
 
 
+def batch_smoke(quick=False):
+    """CI smoke: batched-allocation pipeline must not fall back to the loop.
+
+    `bench_pipeline_batch(require_batch=True)` raises if `run_batch` takes
+    the per-instance allocation path (or if the batched results diverge);
+    cold/warm timings land in the job log.
+    """
+    B, t_loop, t_cold, t_warm = bench_pipeline_batch(
+        quick=quick, require_batch=True
+    )
+    print(f"micro,pipeline_loop_ensemble{B}_s,{t_loop:.4f}")
+    print(f"micro,pipeline_batch_cold_ensemble{B}_s,{t_cold:.4f}")
+    print(f"micro,pipeline_batch_warm_ensemble{B}_s,{t_warm:.4f}")
+    print(f"micro,pipeline_batch_speedup_x,{t_loop / t_warm:.3f}")
+    return B, t_loop, t_cold, t_warm
+
+
 def main(quick=False):
     rows = run(quick=quick)
     print("micro: name,value (us_per_call unless suffixed)")
@@ -144,4 +238,16 @@ def main(quick=False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument(
+        "--batch-smoke",
+        action="store_true",
+        help="run only the batched-allocation pipeline case; error on any "
+        "fallback to the per-instance loop",
+    )
+    args = ap.parse_args()
+    if args.batch_smoke:
+        batch_smoke(quick=args.quick)
+    else:
+        main(quick=args.quick)

@@ -2,9 +2,12 @@
 
 The figure reproductions (fig3/fig5/fig6) are shells over the
 `repro.experiments` ensemble engine: each builds its instance ensemble,
-runs one `sweep()` with a shared (batched or exact) LP phase, and exports
-flat rows.  Results land as JSON + CSV under ``REPRO_RESULTS`` (default
-``results/benchmarks/``).  ``--quick`` shrinks sweeps for CI-speed runs.
+runs one `sweep()` with a shared (batched or exact) LP phase and the
+post-LP schemes executed batch-first through the `repro.pipeline` API,
+and exports flat rows.  Results land as JSON + CSV under ``REPRO_RESULTS``
+(default ``results/benchmarks/``).  ``--quick`` shrinks sweeps for
+CI-speed runs; ``--alloc loop`` pins the figure sweeps to the
+per-instance NumPy allocation reference instead of the batched path.
 """
 
 from __future__ import annotations
@@ -51,6 +54,13 @@ def main(argv=None):
     ap.add_argument(
         "--list", action="store_true", help="list benchmark names and exit"
     )
+    ap.add_argument(
+        "--alloc",
+        choices=("batch", "loop"),
+        default="batch",
+        help="post-LP allocation path for the figure sweeps "
+        "(batch = Pipeline.run_batch, loop = per-instance reference)",
+    )
     args = ap.parse_args(argv)
 
     benches = _benches()
@@ -69,11 +79,16 @@ def main(argv=None):
         chosen = {n: benches[n] for n in names}
     else:
         chosen = benches
+    # Figure sweeps accept the post-LP allocation path; other benches don't.
+    takes_alloc = {"fig3", "fig5", "fig6"}
     t0 = time.perf_counter()
     for name, fn in chosen.items():
         print(f"### {name}", flush=True)
         t = time.perf_counter()
-        fn(quick=args.quick)
+        kwargs = {"quick": args.quick}
+        if name in takes_alloc:
+            kwargs["alloc"] = args.alloc
+        fn(**kwargs)
         print(f"### {name} done in {time.perf_counter()-t:.1f}s\n", flush=True)
     from repro.experiments import results
 

@@ -1,15 +1,17 @@
 """Quickstart: schedule coflows on a 3-core OCS network with Algorithm 1.
 
 Builds the paper's default instance (N=10 ports, M=100 coflows, K=3 cores
-with rates [10,20,30], delta=8), runs the LP-guided scheduler, certifies the
-approximation chain, and compares against the ablation baselines.
+with rates [10,20,30], delta=8), runs the LP-guided scheduler through the
+stage-based Pipeline API, certifies the approximation chain, and compares
+against the ablation baselines from the scheme registry.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import lp, scheduler, theory
+from repro import pipeline
+from repro.core import lp, theory
 from repro.traffic.instances import paper_default_instance
 
 
@@ -25,21 +27,24 @@ def main():
     sol = lp.solve_exact(inst)
     print(f"LP lower bound on weighted CCT: {sol.objective:,.1f}")
 
-    # Stages 2+3: greedy inter-core allocation + intra-core circuit
-    # scheduling (not-all-stop), end to end.
-    res = scheduler.run(inst, "ours", lp_solution=sol)
+    # Stages 2+3: the "ours" pipeline from the scheme registry — greedy
+    # inter-core allocation + intra-core circuit scheduling (not-all-stop).
+    res = pipeline.get_pipeline("ours").run(inst, lp_solution=sol)
     print(f"OURS total weighted CCT:        {res.total_weighted_cct:,.1f}")
     print(f"empirical approximation ratio:  "
           f"{res.total_weighted_cct / sol.objective:.2f}  (bound: 8K = {8 * inst.num_cores})")
 
-    # Certify the analysis chain (Lemmas 2-4 + Theorem 1) on this instance.
-    cert = scheduler.run(inst, "ours", lp_solution=sol, discipline="reserving")
+    # Certify the analysis chain (Lemmas 2-4 + Theorem 1) on this instance;
+    # the per-coflow guarantee holds under the reserving discipline.
+    cert = pipeline.get_pipeline("ours", discipline="reserving").run(
+        inst, lp_solution=sol
+    )
     rep = theory.certify(inst, cert.order, sol.completion, cert.allocation, cert.ccts)
     print(f"certificates hold: {rep.ok()}  (lemma5 factor {rep.lemma5_factor:.2f})")
 
     print("\nbaselines (normalized weighted CCT, >1 = worse than OURS):")
     for scheme in ["wspt_order", "load_only", "sunflow_s", "bvn_s"]:
-        r = scheduler.run(inst, scheme, lp_solution=sol)
+        r = pipeline.get_pipeline(scheme).run(inst, lp_solution=sol)
         print(f"  {r.scheme:12s} {r.total_weighted_cct / res.total_weighted_cct:.3f}x")
 
     p95 = float(np.quantile(res.ccts, 0.95))

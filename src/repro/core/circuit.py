@@ -108,27 +108,65 @@ def schedule_core(
         # Flows waiting at time t (pending + released), in priority order:
         # start those whose two ports are idle (and unreserved); a blocked
         # waiting flow reserves its ports under the reserving discipline.
+        # Both disciplines resolve an event without a per-flow Python scan
+        # (the seed's O(F) loop per event made circuit scheduling the
+        # dominant post-LP cost at sweep scale):
+        #
+        #   * reserving — every still-waiting flow claims its two ports
+        #     whether it starts (occupies) or not (reserves), so a flow
+        #     starts iff its ports are idle AND it is the first waiting
+        #     flow on both of them: a vectorized first-occurrence pass.
+        #     Rounds repeat until a pass starts nothing — with positive
+        #     durations the second pass is always empty (started ports are
+        #     busy past t, blocked flows still outrank their successors),
+        #     and zero-duration flows chain same-port starts at one t
+        #     exactly like the sequential scan did.
+        #   * greedy — non-starters claim nothing, so later flows can
+        #     backfill ports that earlier blocked flows wanted; each round
+        #     starts the highest-priority pending flow whose ports are
+        #     currently idle (at most ~N starts per event, each an O(W)
+        #     vector op).  Re-scanning from the top is safe: ports only
+        #     get busier, so earlier non-candidates stay non-candidates.
         idx = np.nonzero(pending)[0]
         waiting = idx[rel[idx] <= t]
-        blocked_in = np.zeros(num_ports, dtype=bool)
-        blocked_out = np.zeros(num_ports, dtype=bool)
-        for f in waiting:
-            si, dj = src[f], dst[f]
-            if (
-                free_in[si] <= t
-                and free_out[dj] <= t
-                and not (blocked_in[si] or blocked_out[dj])
-            ):
-                establish[f] = t
-                end = t + dur[f]
-                complete[f] = end
-                free_in[si] = end
-                free_out[dj] = end
-                pending[f] = False
-                remaining -= 1
-            elif reserving:
-                blocked_in[si] = True
-                blocked_out[dj] = True
+        if waiting.size:
+            if reserving:
+                while True:
+                    si, dj = src[waiting], dst[waiting]
+                    idle = (free_in[si] <= t) & (free_out[dj] <= t)
+                    first_in = np.zeros(waiting.size, dtype=bool)
+                    first_in[np.unique(si, return_index=True)[1]] = True
+                    first_out = np.zeros(waiting.size, dtype=bool)
+                    first_out[np.unique(dj, return_index=True)[1]] = True
+                    start_sel = idle & first_in & first_out
+                    if not start_sel.any():
+                        break
+                    starts = waiting[start_sel]
+                    end = t + dur[starts]
+                    establish[starts] = t
+                    complete[starts] = end
+                    free_in[src[starts]] = end
+                    free_out[dst[starts]] = end
+                    pending[starts] = False
+                    remaining -= starts.size
+                    waiting = waiting[~start_sel]
+                    if not waiting.size:
+                        break
+            else:
+                while True:
+                    cand = pending[waiting] & (
+                        free_in[src[waiting]] <= t
+                    ) & (free_out[dst[waiting]] <= t)
+                    if not cand.any():
+                        break
+                    f = int(waiting[np.argmax(cand)])
+                    end = t + dur[f]
+                    establish[f] = t
+                    complete[f] = end
+                    free_in[src[f]] = end
+                    free_out[dst[f]] = end
+                    pending[f] = False
+                    remaining -= 1
         if remaining == 0:
             break
         # Advance to the next event: earliest pending release or port-free

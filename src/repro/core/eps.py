@@ -119,41 +119,28 @@ class EpsResult:
 
 
 def run_eps(instance: CoflowInstance, lp_solution=None) -> EpsResult:
-    """Algorithm 1 (EPS variant): H-core EPS, delta = 0 (paper Theorem 2)."""
+    """Algorithm 1 (EPS variant): H-core EPS, delta = 0 (paper Theorem 2).
+
+    Runs the registered ``"eps"`` scheme of the stage pipeline (LP order,
+    tau-blind greedy allocation, fluid-rate circuit stage) and wraps the
+    result with the Theorem-2 bound bookkeeping.
+    """
     from repro.core import lp as lp_mod
-    from repro.core.allocation import allocate
-    from repro.core.scheduler import _flow_priorities
+    from repro.pipeline import get_pipeline
 
     if instance.delta != 0:
         raise ValueError("EPS variant requires delta == 0")
     sol = lp_solution or lp_mod.solve_exact(instance)
-    order = sol.order()
-    alloc = allocate(instance, order, include_tau=False)
-    M, N, H = instance.num_coflows, instance.num_ports, instance.num_cores
-    prio = _flow_priorities(alloc, order, M)
-    schedules = []
-    for h in range(H):
-        sel = alloc.core == h
-        schedules.append(
-            fluid_schedule_core(
-                coflow=alloc.coflow[sel],
-                src=alloc.src[sel],
-                dst=alloc.dst[sel],
-                size=alloc.size[sel],
-                priority=prio[sel],
-                releases=instance.releases,
-                num_ports=N,
-                rate=float(instance.rates[h]),
-            )
-        )
-    ccts = eps_ccts(instance, schedules)
-    total = float(np.dot(instance.weights, ccts))
+    res = get_pipeline("eps").run(instance, lp_solution=sol, validate=False)
+    H = instance.num_cores
+    ccts = res.ccts
+    total = res.total_weighted_cct
     bound = 4.0 * H + (1.0 if (instance.releases > 0).any() else 0.0)
     viol = float(
         np.max(ccts - instance.releases - 4.0 * H * sol.completion)
     )
     return EpsResult(
-        order=order,
+        order=res.order,
         ccts=ccts,
         total_weighted_cct=total,
         lp_objective=sol.objective,

@@ -10,12 +10,26 @@ Schemes:
                 scheduling (Sunflow-style, not-all-stop).
   BvN-S       — OURS order+allocation; Birkhoff–von Neumann decomposition
                 intra-core scheduling under the all-stop model.
+
+`run` is now a deprecation shim over the stage-based `repro.pipeline` API,
+which regenerates all five schemes from declarative `SchemeSpec` registry
+entries and adds an ensemble-batched execution path.  This module keeps:
+
+  * the shared `ScheduleResult` type and the `total_weighted_cct` /
+    `tail_cct` helpers (not deprecated — the pipeline re-exports them);
+  * `_flow_priorities` / `_schedule_all_cores`, the flow-priority and
+    per-core scheduling primitives both APIs (and `core.localsearch`,
+    `collectives.planner`) build on;
+  * `_legacy_run`, the original scheme-name if-chain, retained solely as
+    the parity oracle for `tests/test_pipeline.py` — it is no longer on
+    any execution path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -166,6 +180,9 @@ def _run_bvn(
     )
 
 
+_DEPRECATION_WARNED = False
+
+
 def run(
     instance: CoflowInstance,
     scheme: str = "ours",
@@ -174,10 +191,43 @@ def run(
     discipline: str = "greedy",
     validate: bool = True,
 ) -> ScheduleResult:
-    """Run one scheme end-to-end.
+    """Deprecated shim: run one scheme end-to-end via `repro.pipeline`.
 
-    `lp_solution` may be passed to share one LP solve across schemes (all
-    baselines except WSPT-ORDER reuse the LP-guided order, paper Sec. V-B).
+    Equivalent to ``pipeline.get_pipeline(scheme, discipline=...,
+    lp_method=...).run(instance, lp_solution=..., validate=...)``; kept so
+    existing callers keep working.  Warns `DeprecationWarning` once per
+    process.
+    """
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            "repro.core.scheduler.run is deprecated; build schemes from the "
+            "repro.pipeline registry instead (pipeline.get_pipeline(scheme) "
+            ".run(...) / .run_batch(...))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    from repro.pipeline import get_pipeline
+
+    return get_pipeline(scheme, discipline=discipline, lp_method=lp_method).run(
+        instance, lp_solution=lp_solution, validate=validate
+    )
+
+
+def _legacy_run(
+    instance: CoflowInstance,
+    scheme: str = "ours",
+    lp_method: str = "exact",
+    lp_solution: lp_mod.LPSolution | None = None,
+    discipline: str = "greedy",
+    validate: bool = True,
+) -> ScheduleResult:
+    """The original string-dispatched scheme runner.
+
+    Not reachable from `run` anymore; kept verbatim as the reference
+    oracle `tests/test_pipeline.py` checks the stage-based pipeline (and
+    its batched allocation path) against, bit for bit.
     """
     scheme = scheme.lower()
     needs_lp = scheme in ("ours", "load_only", "sunflow_s", "bvn_s")
@@ -209,6 +259,8 @@ def run(
     raise ValueError(f"unknown scheme {scheme!r}")
 
 
+#: Legacy scheme table (all keys route through the `run` shim); prefer
+#: `repro.pipeline.list_schemes()` / `get_scheme` for the live registry.
 SCHEMES: dict[str, Callable] = {
     "ours": run,
     "wspt_order": run,

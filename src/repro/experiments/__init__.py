@@ -2,9 +2,9 @@
 
 The figure reproductions (benchmarks/fig*.py) are thin shells over this
 package: `ensemble` buckets instances by padded shape and solves the
-ordering LP for each bucket in one batched program, `sweep` drives the
-full order -> allocate -> schedule pipeline per instance on top of the
-shared LP phase, and `results` persists flat rows as JSON + CSV.
+ordering LP for each bucket in one batched program, `sweep` executes the
+requested schemes batch-first through the `repro.pipeline` API on top of
+the shared LP phase, and `results` persists flat rows as JSON + CSV.
 """
 
 from repro.experiments.ensemble import (
@@ -13,7 +13,12 @@ from repro.experiments.ensemble import (
     build_buckets,
     solve_ensemble_lp,
 )
-from repro.experiments.results import group_mean, save_json, save_rows
+from repro.experiments.results import (
+    group_mean,
+    save_json,
+    save_rows,
+    tail_columns,
+)
 from repro.experiments.sweep import (
     DEFAULT_SCHEMES,
     InstanceRecord,
@@ -29,6 +34,7 @@ __all__ = [
     "group_mean",
     "save_json",
     "save_rows",
+    "tail_columns",
     "DEFAULT_SCHEMES",
     "InstanceRecord",
     "SweepResult",

@@ -13,7 +13,15 @@ import json
 import os
 from typing import Any, Iterable, Mapping, Sequence
 
-__all__ = ["results_dir", "save_rows", "save_json", "group_mean"]
+import numpy as np
+
+__all__ = [
+    "results_dir",
+    "save_rows",
+    "save_json",
+    "group_mean",
+    "tail_columns",
+]
 
 
 def results_dir() -> str:
@@ -54,6 +62,24 @@ def save_rows(
         for row in rows:
             writer.writerow({k: row.get(k, "") for k in fields})
     return json_path, csv_path
+
+
+def tail_columns(
+    ccts: np.ndarray, quantiles: Sequence[float] = (0.95, 0.99)
+) -> dict[str, float]:
+    """Absolute tail-CCT columns for one result row.
+
+    The paper reports p95/p99 completion-time tails alongside the weighted
+    aggregate; this derives ``{"p95_cct": ..., "p99_cct": ...}`` (via
+    `repro.core.scheduler.tail_cct`) from a realized per-coflow CCT vector
+    so every exported row carries its tails.
+    """
+    from repro.core.scheduler import tail_cct
+
+    return {
+        f"p{round(q * 100):d}_cct": tail_cct(np.asarray(ccts), q)
+        for q in quantiles
+    }
 
 
 def group_mean(

@@ -1,12 +1,14 @@
-"""Instance-sweep driver: one batched LP solve feeding per-instance runs.
+"""Instance-sweep driver: one batched LP phase, batch-first scheme runs.
 
 `sweep` is the engine behind the figure reproductions: it takes a whole
 ensemble of instances, solves the ordering LP for all of them at once
 (`ensemble.solve_ensemble_lp`, shape-bucketed `solve_subgradient_batch`),
-then runs the order -> inter-core allocation -> intra-core circuit
-scheduling pipeline per instance for every requested scheme.  The per-
-instance stages are cheap host-side algorithms; the LP — previously the
-slowest path in every figure — is a single vectorized program per bucket.
+then executes every requested scheme through the stage-based
+`repro.pipeline` API.  With ``alloc="batch"`` (the default) each scheme's
+`Pipeline.run_batch` consumes the shared LP solutions directly and runs
+the inter-core allocation stage vectorized across the ensemble axis
+(`repro.pipeline.batch_alloc`); ``alloc="loop"`` keeps the per-instance
+NumPy reference path (the oracle the batched path is bit-checked against).
 
 ``lp_method``:
   * ``"batch"``       — batched subgradient (default; fast, ~1% of optimum).
@@ -24,16 +26,15 @@ import dataclasses
 import time
 from typing import Any, Mapping, Sequence
 
-import numpy as np
-
+from repro import pipeline as pipeline_mod
 from repro.core import lp, scheduler, theory
 from repro.core.coflow import CoflowInstance
 from repro.experiments.ensemble import solve_ensemble_lp
-from repro.experiments.results import save_rows
+from repro.experiments.results import save_rows, tail_columns
 
 __all__ = ["DEFAULT_SCHEMES", "InstanceRecord", "SweepResult", "sweep"]
 
-DEFAULT_SCHEMES = ("ours", "wspt_order", "load_only", "sunflow_s", "bvn_s")
+DEFAULT_SCHEMES = pipeline_mod.PAPER_SCHEMES
 
 
 @dataclasses.dataclass
@@ -57,9 +58,9 @@ class InstanceRecord:
         return {s: r.total_weighted_cct / b for s, r in self.results.items()}
 
     def tail_ratio(self, q: float, base: str = "ours") -> dict[str, float]:
-        b = float(np.quantile(self._base(base).ccts, q))
+        b = scheduler.tail_cct(self._base(base).ccts, q)
         return {
-            s: float(np.quantile(r.ccts, q)) / b
+            s: scheduler.tail_cct(r.ccts, q) / b
             for s, r in self.results.items()
         }
 
@@ -75,7 +76,13 @@ class SweepResult:
         return len(self.records)
 
     def rows(self, base: str = "ours") -> list[dict[str, Any]]:
-        """One flat row per (instance, scheme) — the JSON/CSV export shape."""
+        """One flat row per (instance, scheme) — the JSON/CSV export shape.
+
+        Besides the normalized aggregate/tail ratios, every row carries the
+        scheme's absolute tail CCTs (``p95_cct`` / ``p99_cct``, via
+        `scheduler.tail_cct`) so figure scripts can plot tails without
+        re-deriving them from raw schedules.
+        """
         out = []
         for rec in self.records:
             nw = rec.normalized(base)
@@ -89,6 +96,7 @@ class SweepResult:
                     norm_weighted_cct=nw[s],
                     norm_p95=p95[s],
                     norm_p99=p99[s],
+                    **tail_columns(res.ccts),
                     lp_objective=rec.lp.objective,
                 )
                 if s == "ours" and rec.cert_greedy is not None:
@@ -115,6 +123,7 @@ def sweep(
     m_quantum: int = 8,
     p_quantum: int = 8,
     discipline: str = "greedy",
+    alloc: str = "batch",
     certify: bool = False,
     metas: Sequence[Mapping[str, Any]] | None = None,
     validate: bool = True,
@@ -122,10 +131,13 @@ def sweep(
     """Run an ensemble end to end with one shared LP phase.
 
     ``metas`` attaches a dict of sweep coordinates (seed, K, N, delta, ...)
-    to each instance; it is carried into every exported row.  With
-    ``certify=True`` the OURS run is certified against the paper's
-    Lemma 2-4 / Theorem 1 chain (greedy discipline for the practical ratio,
-    reserving for the per-coflow guarantee) — this forces an exact LP.
+    to each instance; it is carried into every exported row.  ``alloc``
+    selects the post-LP execution path: ``"batch"`` vectorizes each
+    scheme's allocation stage across the ensemble, ``"loop"`` runs the
+    per-instance reference.  With ``certify=True`` the OURS run is
+    certified against the paper's Lemma 2-4 / Theorem 1 chain (greedy
+    discipline for the practical ratio, reserving for the per-coflow
+    guarantee) — this forces an exact LP.
     """
     instances = list(instances)
     if metas is None:
@@ -137,6 +149,8 @@ def sweep(
             "certify=True needs lp_method='exact': the subgradient objective "
             "upper-bounds the LP optimum and is not a valid ratio baseline"
         )
+    if alloc not in ("batch", "loop"):
+        raise ValueError(f"unknown alloc mode {alloc!r}")
 
     t0 = time.perf_counter()
     if lp_method == "batch":
@@ -151,28 +165,55 @@ def sweep(
         raise ValueError(f"unknown lp_method {lp_method!r}")
     lp_time = time.perf_counter() - t0
 
+    pipes = {
+        s: pipeline_mod.get_pipeline(s, discipline=discipline)
+        for s in schemes
+    }
+    if alloc == "batch":
+        # One cache for the whole sweep: schemes differing only in their
+        # circuit stage (ours / sunflow_s / bvn_s) share one ordering pass
+        # and one batched allocation instead of recomputing per scheme.
+        stage_cache: dict = {}
+        scheme_results = {
+            s: pipe.run_batch(
+                instances,
+                lp_solutions=sols,
+                validate=validate,
+                stage_cache=stage_cache,
+            )
+            for s, pipe in pipes.items()
+        }
+    else:
+        scheme_results = {
+            s: [
+                pipe.run(inst, lp_solution=sol, validate=validate)
+                for inst, sol in zip(instances, sols)
+            ]
+            for s, pipe in pipes.items()
+        }
+
+    reserving_pipe = (
+        pipeline_mod.get_pipeline("ours", discipline="reserving")
+        if certify
+        else None
+    )
     records = []
     for i, (inst, sol, meta) in enumerate(zip(instances, sols, metas)):
-        results = {
-            s: scheduler.run(
-                inst, s, lp_solution=sol, discipline=discipline,
-                validate=validate,
-            )
-            for s in schemes
-        }
+        results = {s: scheme_results[s][i] for s in schemes}
         rec = InstanceRecord(
             index=i, meta=dict(meta), lp=sol, results=results
         )
         if certify:
-            res = results.get("ours") or scheduler.run(
-                inst, "ours", lp_solution=sol, discipline=discipline
-            )
+            res = results.get("ours")
+            if res is None:
+                ours_pipe = pipes.get("ours") or pipeline_mod.get_pipeline(
+                    "ours", discipline=discipline
+                )
+                res = ours_pipe.run(inst, lp_solution=sol)
             rec.cert_greedy = theory.certify(
                 inst, res.order, sol.completion, res.allocation, res.ccts
             )
-            res_r = scheduler.run(
-                inst, "ours", lp_solution=sol, discipline="reserving"
-            )
+            res_r = reserving_pipe.run(inst, lp_solution=sol)
             rec.cert_reserving = theory.certify(
                 inst, res_r.order, sol.completion, res_r.allocation, res_r.ccts
             )

@@ -40,7 +40,10 @@ _INSTR_RE = re.compile(
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+# Newer jaxlibs emit `call(...), to_apply=%comp` (e.g. the CPU backend's
+# parallel-task wrappers) where older ones said `calls=%comp`; follow both,
+# otherwise every flop inside the called computation is silently dropped.
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 
 _COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",

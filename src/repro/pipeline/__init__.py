@@ -1,0 +1,72 @@
+"""Stage-based scheduling pipeline API.
+
+The paper's Algorithm 1 is three composable phases; this package makes
+that the first-class structure:
+
+  * `repro.pipeline.spec`    — declarative `SchemeSpec` + scheme registry
+    (the five paper schemes and the EPS variant, as data);
+  * `repro.pipeline.stages`  — `OrderStage` / `AllocateStage` /
+    `CircuitStage` protocols and their concrete implementations;
+  * `repro.pipeline.pipeline` — the `Pipeline` object with per-instance
+    `run` and ensemble `run_batch` execution paths;
+  * `repro.pipeline.batch_alloc` — the vectorized (JAX scan) allocation
+    that `run_batch` uses across the ensemble axis.
+
+Typical use::
+
+    from repro import pipeline
+
+    pipe = pipeline.get_pipeline("ours")           # from the registry
+    result = pipe.run(instance)                    # one instance
+    results = pipe.run_batch(ensemble, lp_solutions=sols)  # batch-first
+
+`repro.core.scheduler.run` remains as a deprecation shim over this API.
+"""
+
+from repro.core.scheduler import ScheduleResult, tail_cct, total_weighted_cct
+from repro.pipeline.pipeline import Pipeline, build_pipeline, get_pipeline
+from repro.pipeline.spec import (
+    PAPER_SCHEMES,
+    SchemeSpec,
+    get_scheme,
+    list_schemes,
+    register_scheme,
+)
+from repro.pipeline.stages import (
+    AllocateStage,
+    BvnCircuit,
+    CircuitStage,
+    FifoOrder,
+    FluidCircuit,
+    GreedyAllocate,
+    ListCircuit,
+    LPOrder,
+    OrderStage,
+    SequentialCircuit,
+    WsptOrder,
+)
+
+__all__ = [
+    "Pipeline",
+    "build_pipeline",
+    "get_pipeline",
+    "SchemeSpec",
+    "PAPER_SCHEMES",
+    "register_scheme",
+    "get_scheme",
+    "list_schemes",
+    "OrderStage",
+    "AllocateStage",
+    "CircuitStage",
+    "LPOrder",
+    "WsptOrder",
+    "FifoOrder",
+    "GreedyAllocate",
+    "ListCircuit",
+    "SequentialCircuit",
+    "BvnCircuit",
+    "FluidCircuit",
+    "ScheduleResult",
+    "total_weighted_cct",
+    "tail_cct",
+]

@@ -1,0 +1,224 @@
+"""Ensemble-batched inter-core allocation (Algorithm 1 Lines 3–15, JAX).
+
+The NumPy reference `repro.core.allocation.allocate` walks one instance's
+flow table in (global order, largest-first) sequence keeping per-core
+per-port prefix stats, and places each flow on the core minimizing the
+post-placement prefix lower bound — a Python-level loop of O(K) vector
+steps per flow.  After PR 2 batched the LP phase, this loop became the
+sweep bottleneck: B instances x thousands of flows, each flow a Python
+iteration.
+
+Here the identical recurrence advances a whole ensemble at once: flow
+sequences are padded to a shared length and one `jax.lax.scan` over the
+flow axis carries every instance's (rho, tau, lb) state, with the per-flow
+core selection vmapped across the ensemble axis.  The padding mirrors the
+masking scheme of `lp_terms_batch` / `solve_subgradient_batch`:
+
+  * padded flow steps carry ``valid=False`` and update nothing (masked
+    adds of 0.0 keep the carried f64 state bit-identical);
+  * padded cores start at a large finite lower bound (`_PAD_LB`) and get a
+    large inverse rate, so the argmin never selects them (finite, not inf,
+    to keep ``0 * inf`` NaNs out of the candidate terms);
+  * padded ports are simply never indexed (flow endpoints stay within each
+    instance's real 2N ports).
+
+The scan runs in float64 (locally enabled x64) and performs the same
+floating-point operations in the same order as the NumPy oracle, so core
+choices, prefix port stats and prefix lower bounds are **bit-identical**
+to `allocate` — asserted per scheme and per flow table by
+`tests/test_pipeline.py`.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.allocation import Allocation
+from repro.core.coflow import CoflowInstance, flows_of
+
+__all__ = ["allocate_batch", "flow_sequence"]
+
+# Padded-core sentinel: dominates every real candidate bound but stays
+# finite so padded-step arithmetic never produces inf * 0 = NaN.
+_PAD_LB = 1e30
+
+
+def flow_sequence(
+    instance: CoflowInstance, order: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Flow table of one instance in allocation order.
+
+    Returns (coflow, src, dst, size, ends) where the first four are the
+    (F,) parallel arrays `allocate` would emit (coflows along `order`,
+    flows largest-first within a coflow) and ``ends[pos]`` is the running
+    flow count after the coflow at order position ``pos`` — the index map
+    used to read per-coflow prefix lower bounds out of the scan.
+    """
+    ms, is_, js, ds = [], [], [], []
+    ends = np.zeros(instance.num_coflows, dtype=np.int64)
+    n = 0
+    for pos, m in enumerate(np.asarray(order)):
+        i_idx, j_idx, sizes = flows_of(instance.demands[m], largest_first=True)
+        ms.append(np.full(i_idx.shape[0], m, dtype=np.int64))
+        is_.append(i_idx)
+        js.append(j_idx)
+        ds.append(sizes)
+        n += i_idx.shape[0]
+        ends[pos] = n
+
+    def cat(parts, dtype):
+        if not parts:
+            return np.zeros(0, dtype=dtype)
+        return np.concatenate(parts).astype(dtype)
+
+    return (
+        cat(ms, np.int64),
+        cat(is_, np.int64),
+        cat(js, np.int64),
+        cat(ds, np.float64),
+        ends,
+    )
+
+
+@jax.jit
+def _scan_all(pi, pj, d, valid, inv_rates, delta, one, lb0, core_mask, rho0, tau0):
+    """Run the allocation recurrence for the whole padded ensemble.
+
+    Shapes: pi/pj (B, F) int32 flat-port endpoints, d (B, F) f64 sizes,
+    valid (B, F) bool, inv_rates/lb0/core_mask (B, Kmax), delta/one (B,)
+    f64, rho0/tau0 (B, Kmax, Pmax) f64.  Returns per-step core choices and
+    real-core lb maxima plus the final (rho, tau) port stats.
+
+    ``one`` holds runtime 1.0s: XLA:CPU contracts ``p + q`` with a product
+    operand into a single-rounding FMA, which drifts the lower bounds by
+    1 ulp off the NumPy oracle.  Multiplying each product by a value the
+    compiler cannot prove is 1.0 leaves only ``fma(p, 1.0, q)`` as a legal
+    contraction — bitwise equal to the separately-rounded ``p + q``.
+    """
+
+    def member(pi, pj, d, valid, inv_rates, delta, one, lb0, core_mask, rho0, tau0):
+        def step(carry, x):
+            rho, tau, lb = carry
+            i, j, dd, v = x
+            # Candidate LB on every core if this flow lands there — the
+            # exact expressions (and rounding) of the NumPy oracle.
+            li = (rho[:, i] + dd) * inv_rates * one + (tau[:, i] + 1.0) * delta * one
+            lj = (rho[:, j] + dd) * inv_rates * one + (tau[:, j] + 1.0) * delta * one
+            cand = jnp.maximum(lb, jnp.maximum(li, lj))
+            k = jnp.argmin(cand)
+            dv = jnp.where(v, dd, 0.0)
+            ov = jnp.where(v, 1.0, 0.0)
+            rho = rho.at[k, i].add(dv).at[k, j].add(dv)
+            tau = tau.at[k, i].add(ov).at[k, j].add(ov)
+            lb = lb.at[k].set(jnp.where(v, cand[k], lb[k]))
+            lb_real = jnp.max(jnp.where(core_mask, lb, -jnp.inf))
+            return (rho, tau, lb), (k, lb_real)
+
+        (rho, tau, _), (ks, lbs) = jax.lax.scan(
+            step, (rho0, tau0, lb0), (pi, pj, d, valid)
+        )
+        return ks, lbs, rho, tau
+
+    return jax.vmap(member)(
+        pi, pj, d, valid, inv_rates, delta, one, lb0, core_mask, rho0, tau0
+    )
+
+
+def allocate_batch(
+    instances: Sequence[CoflowInstance],
+    orders: Sequence[np.ndarray],
+    include_tau: bool = True,
+) -> list[Allocation]:
+    """Greedy allocation for a whole ensemble in one vectorized program.
+
+    Equivalent to ``[allocate(inst, order, include_tau) for ...]`` with
+    bit-identical results (see module docstring); instances may differ in
+    every dimension (M, N, K, flow count, rates, delta).
+    """
+    instances = list(instances)
+    if len(instances) != len(orders):
+        raise ValueError("instances/orders length mismatch")
+    B = len(instances)
+    if B == 0:
+        return []
+    seqs = [flow_sequence(inst, o) for inst, o in zip(instances, orders)]
+    Fs = [s[0].shape[0] for s in seqs]
+    Fmax = max(Fs)
+    Kmax = max(inst.num_cores for inst in instances)
+    Pmax = max(2 * inst.num_ports for inst in instances)
+
+    if Fmax == 0:
+        # Nothing to place anywhere in the ensemble; emit empty allocations
+        # with the zero prefix stats the oracle would produce.
+        return [
+            Allocation(
+                coflow=seq[0], src=seq[1], dst=seq[2], size=seq[3],
+                core=np.zeros(0, dtype=np.int64),
+                rho_ports=np.zeros((inst.num_cores, 2 * inst.num_ports)),
+                tau_ports=np.zeros((inst.num_cores, 2 * inst.num_ports)),
+                prefix_lb=np.zeros(inst.num_coflows),
+            )
+            for inst, seq in zip(instances, seqs)
+        ]
+
+    pi = np.zeros((B, Fmax), dtype=np.int32)
+    pj = np.zeros((B, Fmax), dtype=np.int32)
+    d = np.zeros((B, Fmax), dtype=np.float64)
+    valid = np.zeros((B, Fmax), dtype=bool)
+    inv_rates = np.full((B, Kmax), _PAD_LB, dtype=np.float64)
+    delta = np.zeros(B, dtype=np.float64)
+    lb0 = np.full((B, Kmax), _PAD_LB, dtype=np.float64)
+    core_mask = np.zeros((B, Kmax), dtype=bool)
+    for b, (inst, seq) in enumerate(zip(instances, seqs)):
+        _, i_idx, j_idx, sizes, _ = seq
+        F, K, N = Fs[b], inst.num_cores, inst.num_ports
+        pi[b, :F] = i_idx
+        pj[b, :F] = N + j_idx
+        d[b, :F] = sizes
+        valid[b, :F] = True
+        inv_rates[b, :K] = 1.0 / inst.rates
+        delta[b] = inst.delta if include_tau else 0.0
+        lb0[b, :K] = 0.0
+        core_mask[b, :K] = True
+
+    zeros_kp = np.zeros((B, Kmax, Pmax), dtype=np.float64)
+    with enable_x64():
+        ks, lbs, rho, tau = _scan_all(
+            jnp.asarray(pi), jnp.asarray(pj), jnp.asarray(d),
+            jnp.asarray(valid), jnp.asarray(inv_rates), jnp.asarray(delta),
+            jnp.asarray(np.ones(B, dtype=np.float64)),
+            jnp.asarray(lb0), jnp.asarray(core_mask),
+            jnp.asarray(zeros_kp), jnp.asarray(zeros_kp),
+        )
+    ks = np.asarray(ks)
+    lbs = np.asarray(lbs)
+    rho = np.asarray(rho)
+    tau = np.asarray(tau)
+
+    out = []
+    for b, (inst, seq) in enumerate(zip(instances, seqs)):
+        coflow, i_idx, j_idx, sizes, ends = seq
+        F, K, N = Fs[b], inst.num_cores, inst.num_ports
+        # lb starts all-zero, so before any flow lands the prefix LB is 0.
+        prefix_lb = np.where(
+            ends > 0, lbs[b][np.maximum(ends - 1, 0)], 0.0
+        ).astype(np.float64)
+        out.append(
+            Allocation(
+                coflow=coflow,
+                src=i_idx,
+                dst=j_idx,
+                size=sizes,
+                core=ks[b, :F].astype(np.int64),
+                rho_ports=rho[b, :K, : 2 * N],
+                tau_ports=tau[b, :K, : 2 * N],
+                prefix_lb=prefix_lb,
+            )
+        )
+    return out

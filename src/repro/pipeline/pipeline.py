@@ -1,0 +1,229 @@
+"""The stage-composed scheduling pipeline and its builders.
+
+`Pipeline` glues one `OrderStage`, one `AllocateStage` and one
+`CircuitStage` together with two execution paths:
+
+  * `run(instance)` — per-instance, parity with the legacy
+    `repro.core.scheduler.run` (which now delegates here);
+  * `run_batch(ensemble)` — batch-first: consumes the shared LP solutions
+    of `lp.solve_subgradient_batch` / `experiments.solve_ensemble_lp`
+    directly and executes the allocation stage vectorized across the
+    ensemble axis (`repro.pipeline.batch_alloc`), falling back to the
+    per-instance loop only for allocation stages without a batched form
+    (``require_batch=True`` turns that fallback into an error).
+
+`build_pipeline` materializes a declarative `SchemeSpec` into stages via
+per-kind factories — scheme *names* never drive execution, only stage
+kinds chosen at construction time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+from repro.core.coflow import CoflowInstance
+from repro.core.lp import LPSolution
+from repro.core.scheduler import ScheduleResult, total_weighted_cct
+from repro.core.validate import validate_schedule
+from repro.pipeline import stages as st
+from repro.pipeline.spec import SchemeSpec, get_scheme
+
+__all__ = ["Pipeline", "build_pipeline", "get_pipeline"]
+
+
+@dataclasses.dataclass
+class Pipeline:
+    """Order → allocate → circuit-schedule, as composed stages."""
+
+    spec: SchemeSpec
+    order_stage: Any
+    allocate_stage: Any
+    circuit_stage: Any
+
+    def run(
+        self,
+        instance: CoflowInstance,
+        lp_solution: LPSolution | None = None,
+        validate: bool = True,
+    ) -> ScheduleResult:
+        """Run one instance end to end (legacy `scheduler.run` parity).
+
+        ``lp_solution`` shares one LP solve across schemes; ordering stages
+        that do not consume the LP ignore it (and record None).
+        """
+        order, lp_sol = self.order_stage.order(instance, lp_solution)
+        t0 = time.perf_counter()
+        alloc = self.allocate_stage.allocate(instance, order)
+        schedules, ccts = self.circuit_stage.schedule(instance, alloc, order)
+        if validate and schedules is not None:
+            validate_schedule(instance, schedules)
+        return ScheduleResult(
+            scheme=self.spec.name,
+            order=order,
+            allocation=alloc,
+            core_schedules=schedules,
+            ccts=ccts,
+            total_weighted_cct=total_weighted_cct(instance, ccts),
+            lp=lp_sol,
+            wall_time_s=time.perf_counter() - t0,
+        )
+
+    def _order_key(self) -> tuple:
+        """Stage-identity key for sharing computed orders across pipelines
+        (same kind + config on the same ensemble => same orders)."""
+        st = self.order_stage
+        return (
+            "order", st.kind,
+            getattr(st, "method", None), getattr(st, "iters", None),
+        )
+
+    def _alloc_key(self) -> tuple:
+        st = self.allocate_stage
+        return (
+            "alloc", st.kind, getattr(st, "include_tau", None),
+        ) + self._order_key()
+
+    def run_batch(
+        self,
+        instances: Sequence[CoflowInstance],
+        lp_solutions: Sequence[LPSolution | None] | None = None,
+        validate: bool = True,
+        require_batch: bool = False,
+        stage_cache: dict | None = None,
+    ) -> list[ScheduleResult]:
+        """Run a whole ensemble with the allocation stage batched.
+
+        ``lp_solutions`` plugs the output of `solve_subgradient_batch` /
+        `solve_ensemble_lp` straight in (one solution per instance, input
+        order).  Each result's ``wall_time_s`` covers only that instance's
+        circuit stage plus its amortized share of the batched allocation.
+
+        ``stage_cache`` shares computed stage outputs between pipelines
+        run over the *same* ``(instances, lp_solutions)``: pass one dict
+        to every scheme's `run_batch` and schemes that differ only in
+        their circuit stage (e.g. OURS / SUNFLOW-S / BvN-S) reuse one
+        ordering pass and one batched allocation instead of recomputing
+        them per scheme.  The cache is keyed by stage kind + config, so it
+        must not be reused across different ensembles.
+        """
+        instances = list(instances)
+        B = len(instances)
+        if lp_solutions is None:
+            lp_solutions = [None] * B
+        if len(lp_solutions) != B:
+            raise ValueError("lp_solutions length mismatch")
+        ordered = None if stage_cache is None else stage_cache.get(
+            self._order_key()
+        )
+        if ordered is None:
+            ordered = [
+                self.order_stage.order(inst, sol)
+                for inst, sol in zip(instances, lp_solutions)
+            ]
+            if stage_cache is not None:
+                stage_cache[self._order_key()] = ordered
+        orders = [o for o, _ in ordered]
+
+        t0 = time.perf_counter()
+        allocs = None if stage_cache is None else stage_cache.get(
+            self._alloc_key()
+        )
+        if allocs is None:
+            batch_fn = getattr(self.allocate_stage, "allocate_batch", None)
+            allocs = (
+                batch_fn(instances, orders) if batch_fn is not None else None
+            )
+            if allocs is None:
+                if require_batch:
+                    raise RuntimeError(
+                        f"run_batch fell back to the per-instance allocation "
+                        f"loop for scheme {self.spec.key!r} "
+                        f"(allocation stage "
+                        f"{type(self.allocate_stage).__name__} "
+                        f"has no batched path)"
+                    )
+                allocs = [
+                    self.allocate_stage.allocate(inst, o)
+                    for inst, o in zip(instances, orders)
+                ]
+            if stage_cache is not None:
+                stage_cache[self._alloc_key()] = allocs
+        alloc_share = (time.perf_counter() - t0) / max(B, 1)
+
+        results = []
+        for inst, (order, lp_sol), alloc in zip(instances, ordered, allocs):
+            t1 = time.perf_counter()
+            schedules, ccts = self.circuit_stage.schedule(inst, alloc, order)
+            if validate and schedules is not None:
+                validate_schedule(inst, schedules)
+            results.append(
+                ScheduleResult(
+                    scheme=self.spec.name,
+                    order=order,
+                    allocation=alloc,
+                    core_schedules=schedules,
+                    ccts=ccts,
+                    total_weighted_cct=total_weighted_cct(inst, ccts),
+                    lp=lp_sol,
+                    wall_time_s=time.perf_counter() - t1 + alloc_share,
+                )
+            )
+        return results
+
+
+# ---------------------------------------------------------------------------
+# Spec -> stages
+# ---------------------------------------------------------------------------
+
+_ORDER_STAGES = {
+    "lp": lambda lp_method, lp_iters: st.LPOrder(lp_method, lp_iters),
+    "wspt": lambda lp_method, lp_iters: st.WsptOrder(),
+    "fifo": lambda lp_method, lp_iters: st.FifoOrder(),
+}
+
+_CIRCUIT_STAGES = {
+    "list": lambda discipline: st.ListCircuit(discipline),
+    "sequential": lambda discipline: st.SequentialCircuit(),
+    "bvn": lambda discipline: st.BvnCircuit(),
+    "fluid": lambda discipline: st.FluidCircuit(),
+}
+
+
+def build_pipeline(
+    spec: SchemeSpec,
+    *,
+    discipline: str = "greedy",
+    lp_method: str = "exact",
+    lp_iters: int = 3000,
+) -> Pipeline:
+    """Materialize a `SchemeSpec` into an executable `Pipeline`.
+
+    ``discipline`` applies to list-scheduler circuits whose spec leaves it
+    open (the spec's own pin wins); ``lp_method``/``lp_iters`` configure
+    LP-ordering stages that have to solve for themselves.
+    """
+    try:
+        order_stage = _ORDER_STAGES[spec.order](lp_method, lp_iters)
+    except KeyError:
+        raise ValueError(f"unknown order stage kind {spec.order!r}") from None
+    try:
+        circuit_stage = _CIRCUIT_STAGES[spec.circuit](
+            spec.discipline or discipline
+        )
+    except KeyError:
+        raise ValueError(
+            f"unknown circuit stage kind {spec.circuit!r}"
+        ) from None
+    return Pipeline(
+        spec=spec,
+        order_stage=order_stage,
+        allocate_stage=st.GreedyAllocate(include_tau=spec.include_tau),
+        circuit_stage=circuit_stage,
+    )
+
+
+def get_pipeline(scheme: str, **kwargs) -> Pipeline:
+    """Pipeline for a registered scheme key (see `repro.pipeline.spec`)."""
+    return build_pipeline(get_scheme(scheme), **kwargs)

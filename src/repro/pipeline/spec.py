@@ -1,0 +1,101 @@
+"""Declarative scheme specifications and the scheme registry.
+
+The paper's Algorithm 1 is three composable phases — LP-guided ordering,
+inter-core flow allocation, intra-core circuit scheduling — and every
+ablation in Sec. V-B varies exactly one of them.  A `SchemeSpec` captures
+that structure as data: which ordering policy, whether allocation sees the
+reconfiguration (tau) term, and which circuit discipline.  The registry
+regenerates all five paper schemes (plus the Theorem-2 EPS variant) from
+specs, replacing the scheme-name if-chain that used to live in
+`repro.core.scheduler.run`.
+
+Specs are pure data; `repro.pipeline.pipeline.build_pipeline` turns one
+into executable stages.  Registering a new spec is the supported way to add
+a scheme — downstream sweeps and benchmarks pick it up by key with no
+dispatch code to touch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "SchemeSpec",
+    "PAPER_SCHEMES",
+    "register_scheme",
+    "get_scheme",
+    "list_schemes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """One scheduling scheme as stage choices.
+
+    Attributes:
+      key: registry key (``"ours"``, ``"wspt_order"``, ...).
+      name: display name used in results/figures (``"OURS"``, ...).
+      order: ordering stage kind — ``"lp"`` | ``"wspt"`` | ``"fifo"``.
+      include_tau: allocation stage flag; False drops the reconfiguration
+        term (the LOAD-ONLY ablation).
+      circuit: circuit stage kind — ``"list"`` (not-all-stop port-matching
+        list scheduler), ``"sequential"`` (Sunflow-style one-coflow-at-a-
+        time), ``"bvn"`` (Birkhoff–von Neumann, all-stop), or ``"fluid"``
+        (EPS priority fluid rates, Theorem 2).
+      discipline: pins the list-scheduler discipline (``"greedy"`` /
+        ``"reserving"``); None defers to the caller's default.
+    """
+
+    key: str
+    name: str
+    order: str = "lp"
+    include_tau: bool = True
+    circuit: str = "list"
+    discipline: str | None = None
+
+
+#: The five Sec. V-B schemes, in the order figures report them.
+PAPER_SCHEMES = ("ours", "wspt_order", "load_only", "sunflow_s", "bvn_s")
+
+_REGISTRY: dict[str, SchemeSpec] = {}
+
+
+def register_scheme(spec: SchemeSpec, replace: bool = False) -> SchemeSpec:
+    """Add a spec to the registry; ``replace=True`` allows overriding.
+
+    Keys are case-insensitive (lookups lowercase, matching the legacy
+    `scheduler.run` behavior), so registration normalizes the same way —
+    otherwise a mixed-case key would be accepted but unreachable.
+    """
+    key = spec.key.lower()
+    if not replace and key in _REGISTRY:
+        raise ValueError(f"scheme {spec.key!r} already registered")
+    _REGISTRY[key] = spec
+    return spec
+
+
+def get_scheme(key: str) -> SchemeSpec:
+    try:
+        return _REGISTRY[key.lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {key!r}; registered: {', '.join(_REGISTRY)}"
+        ) from None
+
+
+def list_schemes() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+for _spec in (
+    # The paper's Algorithm 1 and its Sec. V-B ablations, as data.
+    SchemeSpec(key="ours", name="OURS"),
+    SchemeSpec(key="wspt_order", name="WSPT-ORDER", order="wspt"),
+    SchemeSpec(key="load_only", name="LOAD-ONLY", include_tau=False),
+    SchemeSpec(key="sunflow_s", name="SUNFLOW-S", circuit="sequential"),
+    SchemeSpec(key="bvn_s", name="BVN-S", circuit="bvn"),
+    # Theorem 2's multi-core EPS variant (delta = 0, fluid priority rates).
+    SchemeSpec(key="eps", name="EPS", include_tau=False, circuit="fluid"),
+):
+    register_scheme(_spec)
+del _spec

@@ -103,6 +103,22 @@ def test_random_schedules_valid(seed, discipline):
     assert (res.ccts > 0).all()
 
 
+@pytest.mark.parametrize("discipline", ["reserving", "greedy"])
+def test_zero_duration_flows_terminate(discipline):
+    """size=0 + delta=0 flows (dur == 0) must schedule, not stall: the
+    vectorized event resolution may see a started flow's ports still free
+    at t, so same-port zero-duration flows chain starts at one instant."""
+    c, s, d, z = _mk([0, 0, 1], [0, 0, 1], [1, 1, 2], [0.0, 0.0, 5.0])
+    cs = schedule_core(
+        c, s, d, z, np.arange(3.0), np.zeros(2), 4, 2.0, 0.0,
+        discipline=discipline,
+    )
+    assert (cs.establish >= 0).all()
+    assert np.array_equal(cs.establish[:2], [0.0, 0.0])
+    assert np.array_equal(cs.complete[:2], [0.0, 0.0])
+    assert cs.complete[2] == 2.5
+
+
 def test_cct_at_least_lower_bound():
     """Physical LB: CCT_m >= a_m + delta + (largest flow of m) / r_max, and
     >= a_m + rho_m / R + delta (aggregate-capacity bound of [31])."""

@@ -13,6 +13,7 @@ from repro.experiments import (
     group_mean,
     save_rows,
     sweep,
+    tail_columns,
 )
 from repro.traffic.instances import random_instance
 
@@ -101,6 +102,46 @@ def test_sweep_metas_mismatch():
         sweep(_ens(), metas=[{}])
 
 
+def test_sweep_batch_alloc_matches_loop():
+    """The batched post-LP path must reproduce the per-instance reference."""
+    ens = _ens()
+    res_b = sweep(ens, lp_iters=200, alloc="batch")
+    res_l = sweep(ens, lp_iters=200, alloc="loop")
+    for rb, rl in zip(res_b.records, res_l.records):
+        for s in rb.results:
+            assert (
+                rb.results[s].total_weighted_cct
+                == rl.results[s].total_weighted_cct
+            )
+            assert np.array_equal(rb.results[s].ccts, rl.results[s].ccts)
+    with pytest.raises(ValueError):
+        sweep(ens, alloc="vector")
+
+
+def test_sweep_rows_carry_tail_cct_columns(tmp_path, monkeypatch):
+    """Every exported row carries absolute p95/p99 tails, JSON and CSV."""
+    monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+    ens = _ens()[:2]
+    res = sweep(ens, schemes=("ours", "wspt_order"), lp_iters=200)
+    rows = res.rows()
+    for row, rec_scheme in zip(rows, ("ours", "wspt_order") * 2):
+        assert row["scheme"] == rec_scheme
+        assert row["p95_cct"] <= row["p99_cct"]
+    for rec in res.records:
+        for s, r in rec.results.items():
+            row = next(
+                x for x in rows
+                if x["instance"] == rec.index and x["scheme"] == s
+            )
+            assert row["p95_cct"] == float(np.quantile(r.ccts, 0.95))
+            assert row["p99_cct"] == float(np.quantile(r.ccts, 0.99))
+    _, cpath = res.save("tails_smoke")
+    with open(cpath) as f:
+        got = list(csv.DictReader(f))
+    assert "p95_cct" in got[0] and "p99_cct" in got[0]
+    assert float(got[0]["p95_cct"]) > 0
+
+
 # ----------------------------------------------------------------- results
 def test_save_rows_json_csv(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
@@ -112,6 +153,15 @@ def test_save_rows_json_csv(tmp_path, monkeypatch):
         got = list(csv.DictReader(f))
     assert got[0]["a"] == "1" and got[0]["c"] == ""
     assert got[1]["c"] == "x"
+
+
+def test_tail_columns_helper():
+    ccts = np.arange(1.0, 101.0)
+    cols = tail_columns(ccts)
+    assert set(cols) == {"p95_cct", "p99_cct"}
+    assert cols["p95_cct"] == float(np.quantile(ccts, 0.95))
+    assert cols["p99_cct"] == float(np.quantile(ccts, 0.99))
+    assert set(tail_columns(ccts, quantiles=(0.5,))) == {"p50_cct"}
 
 
 def test_group_mean():

@@ -1,0 +1,236 @@
+"""Parity-oracle and registry tests for the stage-based Pipeline API.
+
+The legacy `scheduler._legacy_run` if-chain is kept verbatim as the
+reference oracle: every registered paper scheme, run through the new
+`Pipeline` (per-instance and batched), must reproduce its `order`,
+`Allocation` arrays, per-coflow CCTs and total weighted CCT **bit for
+bit** across a seeded grid of (M, N, K) instances.  The batched JAX
+allocation is additionally checked field-by-field against the NumPy
+`allocate` oracle on the same mixed-shape ensemble.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import pipeline
+from repro.core import lp, scheduler
+from repro.core.allocation import allocate
+from repro.pipeline.batch_alloc import allocate_batch
+from repro.traffic.instances import random_instance
+
+# Seeded (M, N, K, seed) grid — mixed shapes on purpose: the batched
+# allocation must pad coflows, ports AND cores in one program.
+GRID = [(5, 3, 2, 0), (8, 4, 3, 1), (10, 4, 4, 2), (6, 5, 2, 3)]
+
+_ALLOC_FIELDS = (
+    "coflow", "src", "dst", "size", "core",
+    "rho_ports", "tau_ports", "prefix_lb",
+)
+
+
+def _grid_instances():
+    return [
+        random_instance(num_coflows=M, num_ports=N, num_cores=K, seed=seed)
+        for M, N, K, seed in GRID
+    ]
+
+
+def _assert_alloc_identical(got, ref, ctx):
+    for f in _ALLOC_FIELDS:
+        a, b = getattr(got, f), getattr(ref, f)
+        assert a.dtype == b.dtype and a.shape == b.shape, (ctx, f)
+        assert np.array_equal(a, b), (ctx, f)
+
+
+@pytest.fixture(scope="module")
+def grid_with_lp():
+    instances = _grid_instances()
+    return instances, [lp.solve_exact(inst) for inst in instances]
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_regenerates_paper_schemes():
+    assert pipeline.PAPER_SCHEMES == (
+        "ours", "wspt_order", "load_only", "sunflow_s", "bvn_s"
+    )
+    specs = {k: pipeline.get_scheme(k) for k in pipeline.PAPER_SCHEMES}
+    assert specs["ours"].name == "OURS"
+    assert specs["wspt_order"].order == "wspt"
+    assert specs["load_only"].include_tau is False
+    assert specs["sunflow_s"].circuit == "sequential"
+    assert specs["bvn_s"].circuit == "bvn"
+    # All five build into runnable pipelines with the right stage kinds.
+    for key, spec in specs.items():
+        pipe = pipeline.build_pipeline(spec)
+        assert pipe.spec is spec
+        assert pipe.order_stage.kind == spec.order
+        assert pipe.circuit_stage.kind == spec.circuit
+
+
+def test_eps_scheme_rejects_nonzero_delta():
+    """The registered "eps" scheme keeps run_eps's precondition: fluid
+    scheduling has no reconfiguration model, so delta > 0 must raise
+    rather than silently report delay-free CCTs."""
+    inst = random_instance(num_coflows=5, num_ports=3, num_cores=2, seed=0)
+    assert inst.delta > 0
+    with pytest.raises(ValueError, match="delta == 0"):
+        pipeline.get_pipeline("eps").run(inst)
+    import dataclasses
+
+    zero = dataclasses.replace(inst, delta=0.0)
+    res = pipeline.get_pipeline("eps").run(zero)
+    assert res.scheme == "EPS" and res.total_weighted_cct > 0
+
+
+def test_unknown_scheme_and_duplicate_registration():
+    with pytest.raises(ValueError, match="unknown scheme"):
+        pipeline.get_scheme("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        pipeline.register_scheme(pipeline.get_scheme("ours"))
+
+
+def test_register_custom_scheme_runs_end_to_end():
+    from repro.pipeline import spec as spec_mod
+
+    custom = pipeline.SchemeSpec(
+        key="Fifo_Greedy_Test", name="FIFO-GREEDY", order="fifo"
+    )
+    pipeline.register_scheme(custom)
+    try:
+        inst = random_instance(num_coflows=6, num_ports=3, num_cores=2, seed=7)
+        # Keys are case-insensitive both ways: the mixed-case registration
+        # is reachable under any casing, and re-registering a case variant
+        # of an existing key is a duplicate, not a shadow.
+        res = pipeline.get_pipeline("fifo_greedy_test").run(inst)
+        assert res.scheme == "FIFO-GREEDY"
+        assert res.lp is None  # fifo ordering never solves the LP
+        assert res.total_weighted_cct > 0
+        with pytest.raises(ValueError, match="already registered"):
+            pipeline.register_scheme(
+                pipeline.SchemeSpec(key="FIFO_GREEDY_TEST", name="dup")
+            )
+    finally:
+        spec_mod._REGISTRY.pop("fifo_greedy_test", None)
+
+
+# -------------------------------------------------------- per-instance parity
+@pytest.mark.parametrize("scheme", pipeline.PAPER_SCHEMES)
+def test_pipeline_run_matches_legacy_oracle(scheme, grid_with_lp):
+    instances, sols = grid_with_lp
+    pipe = pipeline.get_pipeline(scheme)
+    for inst, sol in zip(instances, sols):
+        ref = scheduler._legacy_run(inst, scheme, lp_solution=sol)
+        got = pipe.run(inst, lp_solution=sol)
+        assert got.scheme == ref.scheme
+        assert np.array_equal(got.order, ref.order)
+        _assert_alloc_identical(got.allocation, ref.allocation, scheme)
+        assert np.array_equal(got.ccts, ref.ccts)
+        assert got.total_weighted_cct == ref.total_weighted_cct
+
+
+# ------------------------------------------------------------- batched parity
+@pytest.mark.parametrize("include_tau", [True, False])
+def test_batched_allocation_bit_identical_to_numpy(include_tau, grid_with_lp):
+    instances, sols = grid_with_lp
+    orders = [sol.order() for sol in sols]
+    batch = allocate_batch(instances, orders, include_tau=include_tau)
+    assert len(batch) == len(instances)
+    for inst, order, got in zip(instances, orders, batch):
+        ref = allocate(inst, order, include_tau=include_tau)
+        _assert_alloc_identical(got, ref, include_tau)
+
+
+@pytest.mark.parametrize("scheme", pipeline.PAPER_SCHEMES)
+def test_run_batch_matches_legacy_oracle(scheme, grid_with_lp):
+    instances, sols = grid_with_lp
+    pipe = pipeline.get_pipeline(scheme)
+    batch = pipe.run_batch(
+        instances, lp_solutions=sols, require_batch=True
+    )
+    for inst, sol, got in zip(instances, sols, batch):
+        ref = scheduler._legacy_run(inst, scheme, lp_solution=sol)
+        assert np.array_equal(got.order, ref.order)
+        _assert_alloc_identical(got.allocation, ref.allocation, scheme)
+        assert np.array_equal(got.ccts, ref.ccts)
+        assert got.total_weighted_cct == ref.total_weighted_cct
+
+
+def test_run_batch_stage_cache_shares_order_and_allocation(grid_with_lp):
+    """Schemes differing only in the circuit stage reuse one ordering pass
+    and one batched allocation through a shared stage_cache — with results
+    unchanged."""
+    instances, sols = grid_with_lp
+    cache: dict = {}
+    by_scheme = {
+        s: pipeline.get_pipeline(s).run_batch(
+            instances, lp_solutions=sols, require_batch=True,
+            stage_cache=cache,
+        )
+        for s in ("ours", "sunflow_s", "bvn_s", "load_only")
+    }
+    # ours/sunflow_s/bvn_s share (lp order, tau-aware allocation): the very
+    # same Allocation objects; load_only (tau-blind) gets its own pass.
+    for a, b in zip(by_scheme["ours"], by_scheme["sunflow_s"]):
+        assert a.allocation is b.allocation
+    for a, b in zip(by_scheme["ours"], by_scheme["bvn_s"]):
+        assert a.allocation is b.allocation
+    for a, b in zip(by_scheme["ours"], by_scheme["load_only"]):
+        assert a.allocation is not b.allocation
+    assert len(cache) == 3  # one order key (lp), two alloc keys (tau/no-tau)
+    for s, results in by_scheme.items():
+        for inst, sol, got in zip(instances, sols, results):
+            ref = scheduler._legacy_run(inst, s, lp_solution=sol)
+            assert got.total_weighted_cct == ref.total_weighted_cct
+            assert np.array_equal(got.ccts, ref.ccts)
+
+
+def test_run_batch_require_batch_raises_on_loop_fallback():
+    class LoopOnlyAllocate:
+        kind = "loop-only"
+
+        def allocate(self, instance, order):
+            return allocate(instance, order)
+
+    pipe = pipeline.get_pipeline("ours")
+    pipe.allocate_stage = LoopOnlyAllocate()
+    inst = random_instance(num_coflows=5, num_ports=3, num_cores=2, seed=0)
+    sol = lp.solve_exact(inst)
+    with pytest.raises(RuntimeError, match="fell back"):
+        pipe.run_batch([inst], lp_solutions=[sol], require_batch=True)
+    # Without the flag the loop fallback is silent and still correct.
+    res = pipe.run_batch([inst], lp_solutions=[sol])
+    ref = scheduler._legacy_run(inst, "ours", lp_solution=sol)
+    assert res[0].total_weighted_cct == ref.total_weighted_cct
+
+
+def test_allocate_batch_empty_and_mismatch():
+    assert allocate_batch([], []) == []
+    inst = random_instance(num_coflows=4, num_ports=3, num_cores=2, seed=0)
+    with pytest.raises(ValueError, match="length mismatch"):
+        allocate_batch([inst], [])
+
+
+# -------------------------------------------------------------- deprecation
+def test_scheduler_run_shim_works_and_warns_exactly_once(grid_with_lp):
+    instances, sols = grid_with_lp
+    inst, sol = instances[0], sols[0]
+    old_flag = scheduler._DEPRECATION_WARNED
+    scheduler._DEPRECATION_WARNED = False
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            r1 = scheduler.run(inst, "ours", lp_solution=sol)
+            r2 = scheduler.run(inst, "wspt_order")
+        dep = [
+            w for w in caught if issubclass(w.category, DeprecationWarning)
+        ]
+        assert len(dep) == 1
+        assert "repro.pipeline" in str(dep[0].message)
+    finally:
+        scheduler._DEPRECATION_WARNED = old_flag
+    # The shim still produces oracle-identical results.
+    ref = scheduler._legacy_run(inst, "ours", lp_solution=sol)
+    assert r1.total_weighted_cct == ref.total_weighted_cct
+    assert r2.scheme == "WSPT-ORDER"
