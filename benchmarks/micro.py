@@ -1,11 +1,15 @@
 """Micro-benchmarks: scheduler stages, LP solvers, Pallas kernel oracles,
 the batched LP-ensemble engine vs the sequential per-instance loop, and
-the batch-first post-LP pipeline (`Pipeline.run_batch`) vs the
-per-instance order -> allocate -> schedule loop.
+the batch-first post-LP pipeline (`Pipeline.run_batch`, allocation and
+circuit stages both ensemble-batched) vs the per-instance
+order -> allocate -> schedule loop, with the circuit stage additionally
+timed on its own (``circuit_batch_speedup_x``).
 
 ``python -m benchmarks.micro --batch-smoke`` runs only the pipeline case
 with ``require_batch=True`` (any fallback to the per-instance allocation
-loop is an error) and prints cold/warm timings — the CI smoke step."""
+or circuit loop is an error), prints cold/warm timings and writes them to
+``results/benchmarks/micro.json`` — the CI smoke step and its uploaded
+perf-trajectory artifact."""
 
 from __future__ import annotations
 
@@ -85,12 +89,24 @@ def bench_pipeline_batch(
     Post-LP wall time only: the shared LP phase is solved once up front
     (as a sweep does) and both paths consume the same solutions.  The loop
     path is `Pipeline.run` per instance — order, NumPy reference
-    allocation, circuit scheduling; the batch path is `Pipeline.run_batch`
-    with the allocation stage vectorized across the mixed-shape ensemble.
-    Reported cold (first call compiles the allocation scan for this padded
-    shape) and warm; results are checked bit-identical to the loop.
+    allocation, NumPy event-loop circuit scheduling; the batch path is
+    `Pipeline.run_batch` with both the allocation stage and the circuit
+    stage (padded event calendar) vectorized across the mixed-shape
+    ensemble.
+
+    The circuit stage is additionally timed on its own (loop vs batched
+    calendar, cold and warm) on the allocations both paths share.  Cold
+    numbers are first-call-in-process: nothing clears the XLA cache, so
+    each padded bucket compiles exactly once and every later call in the
+    process — including the pipeline cold run, which reuses the circuit
+    bucket the circuit bench just compiled — hits the cached program
+    (this is what un-regressed `pipeline_batch_cold` vs the loop).
+    Results are checked bit-identical to the loop.
+
+    Returns a dict of row-name -> seconds (plus the ensemble size ``B``).
     """
     from repro.experiments import solve_ensemble_lp
+    from repro.pipeline.batch_circuit import schedule_batch
 
     B = 8 if quick else ensemble_size
     rng = np.random.default_rng(1)
@@ -115,7 +131,25 @@ def bench_pipeline_batch(
     ]
     t_loop = time.perf_counter() - t0
 
-    jax.clear_caches()
+    # Circuit stage in isolation, on the allocations both paths share.
+    orders = [sol.order() for sol in sols]
+    allocs = pipe.allocate_stage.allocate_batch(ens, orders)
+    t0 = time.perf_counter()
+    ref_pairs = [
+        pipe.circuit_stage.schedule(inst, alloc, order)
+        for inst, alloc, order in zip(ens, allocs, orders)
+    ]
+    t_circuit_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pairs = schedule_batch(ens, allocs, orders, pipe.circuit_stage.discipline)
+    t_circuit_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pairs = schedule_batch(ens, allocs, orders, pipe.circuit_stage.discipline)
+    t_circuit_warm = time.perf_counter() - t0
+    for (_, got), (_, ref) in zip(pairs, ref_pairs):
+        if not np.array_equal(got, ref):
+            raise AssertionError("batched circuit diverged from the loop")
+
     t0 = time.perf_counter()
     pipe.run_batch(
         ens, lp_solutions=sols, validate=False, require_batch=require_batch
@@ -135,7 +169,17 @@ def bench_pipeline_batch(
         raise AssertionError(
             f"run_batch diverged from the per-instance loop by {mismatch}"
         )
-    return B, t_loop, t_cold, t_warm
+    return {
+        "B": B,
+        f"pipeline_loop_ensemble{B}_s": t_loop,
+        f"pipeline_batch_cold_ensemble{B}_s": t_cold,
+        f"pipeline_batch_warm_ensemble{B}_s": t_warm,
+        "pipeline_batch_speedup_x": t_loop / t_warm,
+        f"circuit_loop_ensemble{B}_s": t_circuit_loop,
+        f"circuit_batch_cold_ensemble{B}_s": t_circuit_cold,
+        f"circuit_batch_warm_ensemble{B}_s": t_circuit_warm,
+        "circuit_batch_speedup_x": t_circuit_loop / t_circuit_warm,
+    }
 
 
 def run(quick=False):
@@ -164,13 +208,12 @@ def run(quick=False):
     rows.append(("lp_batch_speedup_x", speedup))
     rows.append(("lp_batch_objective_gap", gap))
 
-    # Batch-first post-LP pipeline vs the per-instance scheme loop
-    # (whole-ensemble seconds, same names/units as the --batch-smoke log).
-    Bp, t_loop, t_cold, t_warm = bench_pipeline_batch(quick=quick)
-    rows.append((f"pipeline_loop_ensemble{Bp}_s", t_loop))
-    rows.append((f"pipeline_batch_cold_ensemble{Bp}_s", t_cold))
-    rows.append((f"pipeline_batch_warm_ensemble{Bp}_s", t_warm))
-    rows.append(("pipeline_batch_speedup_x", t_loop / t_warm))
+    # Batch-first post-LP pipeline vs the per-instance scheme loop, plus
+    # the circuit stage on its own (whole-ensemble seconds, same
+    # names/units as the --batch-smoke log).
+    stats = bench_pipeline_batch(quick=quick)
+    stats.pop("B")
+    rows.extend(stats.items())
 
     # Kernel oracles (interpret mode on CPU).
     from repro.kernels.lp_terms import lp_terms, lp_terms_batch
@@ -213,20 +256,20 @@ def run(quick=False):
 
 
 def batch_smoke(quick=False):
-    """CI smoke: batched-allocation pipeline must not fall back to the loop.
+    """CI smoke: the batched pipeline must not fall back to any loop.
 
     `bench_pipeline_batch(require_batch=True)` raises if `run_batch` takes
-    the per-instance allocation path (or if the batched results diverge);
-    cold/warm timings land in the job log.
+    the per-instance allocation *or* circuit path (or if the batched
+    results diverge from the loop); circuit-stage and whole-pipeline
+    cold/warm timings land in the job log and in
+    ``results/benchmarks/micro.json`` (the CI perf-trajectory artifact).
     """
-    B, t_loop, t_cold, t_warm = bench_pipeline_batch(
-        quick=quick, require_batch=True
-    )
-    print(f"micro,pipeline_loop_ensemble{B}_s,{t_loop:.4f}")
-    print(f"micro,pipeline_batch_cold_ensemble{B}_s,{t_cold:.4f}")
-    print(f"micro,pipeline_batch_warm_ensemble{B}_s,{t_warm:.4f}")
-    print(f"micro,pipeline_batch_speedup_x,{t_loop / t_warm:.3f}")
-    return B, t_loop, t_cold, t_warm
+    stats = bench_pipeline_batch(quick=quick, require_batch=True)
+    stats.pop("B")
+    for name, val in stats.items():
+        print(f"micro,{name},{val:.4f}")
+    save_json("micro", stats)
+    return stats
 
 
 def main(quick=False):

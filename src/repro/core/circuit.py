@@ -20,6 +20,14 @@ Event-driven implementation: decision instants are release times and port
 free times; between events the port state is constant, so scanning only at
 events is exact.  The per-event scan is vectorized over flows, with a
 sequential inner pick loop (at most N starts per event, port-limited).
+
+`resolve_event` is the event-resolution primitive in array form: one
+round's start set as pure masked array ops over full-length flow arrays
+(no compaction), which is exactly the shape the ensemble-batched JAX
+scheduler (`repro.pipeline.batch_circuit`) and the Pallas reduction
+kernel (`repro.kernels.event_resolve`) execute per event.  `schedule_core`
+drives the same primitive per instance, so the three implementations stay
+one algorithm.
 """
 
 from __future__ import annotations
@@ -28,9 +36,58 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["CoreSchedule", "schedule_core", "NOT_SCHEDULED"]
+__all__ = ["CoreSchedule", "schedule_core", "resolve_event", "NOT_SCHEDULED"]
 
 NOT_SCHEDULED = -1.0
+
+
+def resolve_event(
+    src: np.ndarray,
+    dst: np.ndarray,
+    free_in: np.ndarray,
+    free_out: np.ndarray,
+    waiting: np.ndarray,
+    t: float,
+    discipline: str = "reserving",
+) -> np.ndarray:
+    """One resolution round at decision instant ``t``: the start mask.
+
+    Args:
+      src/dst: (F,) port endpoints of all flows, priority order.
+      free_in/free_out: (N,) port free times.
+      waiting: (F,) bool — pending flows already released at ``t``.
+      t: the decision instant.
+      discipline: "reserving" or "greedy".
+
+    Returns (F,) bool mask of flows that establish at ``t`` this round.
+
+    Both disciplines are one first-occurrence (segment-min over ports)
+    pass; they differ only in who claims ports:
+
+      * reserving — every *waiting* flow claims its two ports whether it
+        can start or not, so a flow starts iff its ports are idle AND it
+        is the first waiting flow on both of them;
+      * greedy — only *idle* flows claim (non-starters reserve nothing),
+        so the round starts every idle flow that is first-among-idle on
+        both its ports.  Iterating rounds to a fixpoint at fixed ``t``
+        yields exactly the schedule of the sequential highest-priority-
+        first backfill scan: ports never get freer within an instant, so
+        a flow blocked by an earlier idle claimer either starts in a
+        later round (the claimer started and, with dur = 0, left the port
+        free — as the sequential rescan would) or stays blocked (the port
+        went busy) — asserted against a literal sequential scan by
+        `tests/test_circuit.py::test_greedy_round_fixpoint_matches_scan`.
+    """
+    idle = waiting & (free_in[src] <= t) & (free_out[dst] <= t)
+    claim = waiting if discipline == "reserving" else idle
+    F = src.shape[0]
+    ar = np.arange(F)
+    claim_idx = np.where(claim, ar, F)
+    first_in = np.full(free_in.shape[0], F, dtype=np.int64)
+    np.minimum.at(first_in, src, claim_idx)
+    first_out = np.full(free_out.shape[0], F, dtype=np.int64)
+    np.minimum.at(first_out, dst, claim_idx)
+    return idle & (ar == first_in[src]) & (ar == first_out[dst])
 
 
 @dataclasses.dataclass
@@ -47,7 +104,18 @@ class CoreSchedule:
     delta: float
 
     def cct_per_coflow(self, num_coflows: int) -> np.ndarray:
-        """Max completion per coflow on this core (0 where absent)."""
+        """Max completion per coflow on this core (0 where absent).
+
+        Every flow must be scheduled: a `NOT_SCHEDULED` completion (-1)
+        would be silently absorbed by the max against the 0 baseline and
+        report a finished coflow that never ran.
+        """
+        if (self.complete == NOT_SCHEDULED).any():
+            raise ValueError(
+                "cct_per_coflow on a schedule with NOT_SCHEDULED flows: "
+                f"{int((self.complete == NOT_SCHEDULED).sum())} of "
+                f"{self.complete.shape[0]} flows never established"
+            )
         out = np.zeros(num_coflows)
         np.maximum.at(out, self.coflow, self.complete)
         return out
@@ -110,63 +178,36 @@ def schedule_core(
         # waiting flow reserves its ports under the reserving discipline.
         # Both disciplines resolve an event without a per-flow Python scan
         # (the seed's O(F) loop per event made circuit scheduling the
-        # dominant post-LP cost at sweep scale):
+        # dominant post-LP cost at sweep scale); the per-round start set is
+        # `resolve_event`, the array-form primitive the batched JAX path
+        # and the Pallas kernel share:
         #
-        #   * reserving — every still-waiting flow claims its two ports
-        #     whether it starts (occupies) or not (reserves), so a flow
-        #     starts iff its ports are idle AND it is the first waiting
-        #     flow on both of them: a vectorized first-occurrence pass.
-        #     Rounds repeat until a pass starts nothing — with positive
-        #     durations the second pass is always empty (started ports are
-        #     busy past t, blocked flows still outrank their successors),
-        #     and zero-duration flows chain same-port starts at one t
-        #     exactly like the sequential scan did.
-        #   * greedy — non-starters claim nothing, so later flows can
-        #     backfill ports that earlier blocked flows wanted; each round
-        #     starts the highest-priority pending flow whose ports are
-        #     currently idle (at most ~N starts per event, each an O(W)
-        #     vector op).  Re-scanning from the top is safe: ports only
-        #     get busier, so earlier non-candidates stay non-candidates.
-        idx = np.nonzero(pending)[0]
-        waiting = idx[rel[idx] <= t]
-        if waiting.size:
-            if reserving:
-                while True:
-                    si, dj = src[waiting], dst[waiting]
-                    idle = (free_in[si] <= t) & (free_out[dj] <= t)
-                    first_in = np.zeros(waiting.size, dtype=bool)
-                    first_in[np.unique(si, return_index=True)[1]] = True
-                    first_out = np.zeros(waiting.size, dtype=bool)
-                    first_out[np.unique(dj, return_index=True)[1]] = True
-                    start_sel = idle & first_in & first_out
-                    if not start_sel.any():
-                        break
-                    starts = waiting[start_sel]
-                    end = t + dur[starts]
-                    establish[starts] = t
-                    complete[starts] = end
-                    free_in[src[starts]] = end
-                    free_out[dst[starts]] = end
-                    pending[starts] = False
-                    remaining -= starts.size
-                    waiting = waiting[~start_sel]
-                    if not waiting.size:
-                        break
-            else:
-                while True:
-                    cand = pending[waiting] & (
-                        free_in[src[waiting]] <= t
-                    ) & (free_out[dst[waiting]] <= t)
-                    if not cand.any():
-                        break
-                    f = int(waiting[np.argmax(cand)])
-                    end = t + dur[f]
-                    establish[f] = t
-                    complete[f] = end
-                    free_in[src[f]] = end
-                    free_out[dst[f]] = end
-                    pending[f] = False
-                    remaining -= 1
+        #   * reserving — first-occurrence pass per round.  Rounds repeat
+        #     until a pass starts nothing — with positive durations the
+        #     second pass is always empty (started ports are busy past t,
+        #     blocked flows still outrank their successors), and zero-
+        #     duration flows chain same-port starts at one t exactly like
+        #     the sequential scan did.
+        #   * greedy — every first-among-idle flow starts per round;
+        #     re-rounding to a fixpoint reproduces the sequential backfill
+        #     scan exactly (ports only get busier, so earlier
+        #     non-candidates stay non-candidates).
+        waiting = pending & (rel <= t)
+        while waiting.any():
+            start = resolve_event(
+                src, dst, free_in, free_out, waiting, t,
+                "reserving" if reserving else "greedy",
+            )
+            if not start.any():
+                break
+            end = t + dur[start]
+            establish[start] = t
+            complete[start] = end
+            free_in[src[start]] = end
+            free_out[dst[start]] = end
+            pending[start] = False
+            remaining -= int(start.sum())
+            waiting &= ~start
         if remaining == 0:
             break
         # Advance to the next event: earliest pending release or port-free

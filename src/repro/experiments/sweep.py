@@ -124,6 +124,7 @@ def sweep(
     p_quantum: int = 8,
     discipline: str = "greedy",
     alloc: str = "batch",
+    circuit: str = "batch",
     certify: bool = False,
     metas: Sequence[Mapping[str, Any]] | None = None,
     validate: bool = True,
@@ -132,12 +133,21 @@ def sweep(
 
     ``metas`` attaches a dict of sweep coordinates (seed, K, N, delta, ...)
     to each instance; it is carried into every exported row.  ``alloc``
-    selects the post-LP execution path: ``"batch"`` vectorizes each
-    scheme's allocation stage across the ensemble, ``"loop"`` runs the
-    per-instance reference.  With ``certify=True`` the OURS run is
-    certified against the paper's Lemma 2-4 / Theorem 1 chain (greedy
-    discipline for the practical ratio, reserving for the per-coflow
-    guarantee) — this forces an exact LP.
+    selects the post-LP execution path: ``"batch"`` runs each scheme
+    through `Pipeline.run_batch` (allocation vectorized via
+    `repro.pipeline.batch_alloc`), ``"loop"`` runs the fully per-instance
+    reference (`Pipeline.run`) that every batched path is bit-checked
+    against.  ``circuit`` selects the list scheduler's backend *within*
+    the batched path — ``"batch"`` (the `batch_circuit` padded event
+    calendar) or ``"loop"`` (the per-instance oracle inside `run_batch`);
+    with ``alloc="loop"`` the whole pipeline is already per-instance, so
+    ``circuit`` has no effect there.
+    With ``certify=True`` the OURS run is certified against the paper's
+    Lemma 2-4 / Theorem 1 chain (greedy discipline for the practical
+    ratio, reserving for the per-coflow guarantee) — this forces an exact
+    LP; the reserving rerun differs from OURS only in circuit discipline,
+    so it shares the sweep's ordering pass and batched allocation through
+    the stage cache and re-runs just the circuit stage.
     """
     instances = list(instances)
     if metas is None:
@@ -151,6 +161,8 @@ def sweep(
         )
     if alloc not in ("batch", "loop"):
         raise ValueError(f"unknown alloc mode {alloc!r}")
+    if circuit not in ("batch", "loop"):
+        raise ValueError(f"unknown circuit mode {circuit!r}")
 
     t0 = time.perf_counter()
     if lp_method == "batch":
@@ -166,14 +178,18 @@ def sweep(
     lp_time = time.perf_counter() - t0
 
     pipes = {
-        s: pipeline_mod.get_pipeline(s, discipline=discipline)
+        s: pipeline_mod.get_pipeline(
+            s, discipline=discipline, circuit_backend=circuit
+        )
         for s in schemes
     }
+    # One cache for the whole sweep: schemes differing only in their
+    # circuit stage (ours / sunflow_s / bvn_s) share one ordering pass
+    # and one batched allocation instead of recomputing per scheme, and
+    # the certify-reserving rerun below (differs only in discipline)
+    # shares both as well.
+    stage_cache: dict = {}
     if alloc == "batch":
-        # One cache for the whole sweep: schemes differing only in their
-        # circuit stage (ours / sunflow_s / bvn_s) share one ordering pass
-        # and one batched allocation instead of recomputing per scheme.
-        stage_cache: dict = {}
         scheme_results = {
             s: pipe.run_batch(
                 instances,
@@ -192,11 +208,36 @@ def sweep(
             for s, pipe in pipes.items()
         }
 
-    reserving_pipe = (
-        pipeline_mod.get_pipeline("ours", discipline="reserving")
-        if certify
-        else None
-    )
+    ours_results = reserving_results = None
+    if certify:
+        # The certification reruns follow the sweep's own execution mode:
+        # batched reruns share order+allocation through the stage cache;
+        # alloc="loop" keeps every certified quantity on the per-instance
+        # reference path (the batch-free oracle mode must not certify
+        # batched-allocator outputs).
+        def _rerun(pipe):
+            if alloc == "batch":
+                return pipe.run_batch(
+                    instances, lp_solutions=sols, validate=validate,
+                    stage_cache=stage_cache,
+                )
+            return [
+                pipe.run(inst, lp_solution=sol, validate=validate)
+                for inst, sol in zip(instances, sols)
+            ]
+
+        ours_results = scheme_results.get("ours")
+        if ours_results is None:
+            ours_results = _rerun(
+                pipeline_mod.get_pipeline(
+                    "ours", discipline=discipline, circuit_backend=circuit
+                )
+            )
+        reserving_results = _rerun(
+            pipeline_mod.get_pipeline(
+                "ours", discipline="reserving", circuit_backend=circuit
+            )
+        )
     records = []
     for i, (inst, sol, meta) in enumerate(zip(instances, sols, metas)):
         results = {s: scheme_results[s][i] for s in schemes}
@@ -204,16 +245,11 @@ def sweep(
             index=i, meta=dict(meta), lp=sol, results=results
         )
         if certify:
-            res = results.get("ours")
-            if res is None:
-                ours_pipe = pipes.get("ours") or pipeline_mod.get_pipeline(
-                    "ours", discipline=discipline
-                )
-                res = ours_pipe.run(inst, lp_solution=sol)
+            res = ours_results[i]
             rec.cert_greedy = theory.certify(
                 inst, res.order, sol.completion, res.allocation, res.ccts
             )
-            res_r = reserving_pipe.run(inst, lp_solution=sol)
+            res_r = reserving_results[i]
             rec.cert_reserving = theory.certify(
                 inst, res_r.order, sol.completion, res_r.allocation, res_r.ccts
             )

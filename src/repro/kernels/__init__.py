@@ -7,6 +7,8 @@ interpret mode (tests/test_kernels.py) — TPU is the compile target, CPU
 interpret mode is the correctness harness.
 
   port_stats      — batched per-port rho/tau reduction (scheduler hot spot)
+  event_resolve   — per-event idle / first-waiting-per-port reduction of
+                    the batched circuit calendar (pipeline/batch_circuit)
   lp_terms        — fused X^T P matmuls + row-max (ordering-LP oracle)
   flash_attention — GQA flash attention w/ causal + sliding window
   quant           — int8 quantize/dequantize for gradient compression

@@ -1,0 +1,3 @@
+from repro.kernels.event_resolve.ops import event_resolve, event_resolve_ref
+
+__all__ = ["event_resolve", "event_resolve_ref"]

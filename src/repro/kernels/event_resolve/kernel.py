@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: per-event idle / first-waiting reduction.
+
+One resolution round of the reserving discipline for a whole batch of
+(instance, core) members — the inner reduction of the batched event
+calendar (`repro.pipeline.batch_circuit`).  The CPU/interpret path of the
+scheduler fuses the same computation as scatter/gather jnp inside its
+`while_loop`; this kernel is the TPU tiling of that round, expressed
+scatter-free so it maps onto the VPU/MXU:
+
+  * port membership as one-hot masks ``(F, N)`` built from a broadcasted
+    iota against the (F, 1) endpoint column;
+  * the idle test as a masked lane reduction of the port free times;
+  * the first-waiting-per-port test via a strictly-lower-triangular
+    ``(F, F) @ (F, N)`` matmul counting earlier claims on each port — a
+    flow is blocked iff an earlier waiting flow claims one of its ports.
+
+Grid: one program per member; each member's blocks are read from HBM
+exactly once.  Validated against the jnp oracle (`ref.py`) in interpret
+mode on CPU (`tests/test_kernels.py`).
+
+This kernel is an f32 building block, not yet wired into the batched
+calendar (whose bit-parity contract is f64): the scheduler's `while_loop`
+keeps its fused jnp round, and the kernel stands ready for the TPU
+profiling pass that decides whether an f32 in-round reduction (with an
+f64 fix-up) pays for itself — see ROADMAP.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, pad_to, use_interpret
+
+
+def _event_resolve_kernel(
+    src_ref, dst_ref, rel_ref, mask_ref, free_in_ref, free_out_ref, t_ref,
+    start_ref, *, f_pad: int, n_pad: int,
+):
+    t = t_ref[0, 0]
+    src = src_ref[0]  # (Fp, 1) int32
+    dst = dst_ref[0]
+    ports = jax.lax.broadcasted_iota(jnp.int32, (f_pad, n_pad), 1)
+    onehot_i = (src == ports).astype(jnp.float32)  # (Fp, Np)
+    onehot_j = (dst == ports).astype(jnp.float32)
+    waiting = mask_ref[0] * (rel_ref[0] <= t).astype(jnp.float32)  # (Fp, 1)
+    free_i = jnp.sum(onehot_i * free_in_ref[...], axis=1, keepdims=True)
+    free_j = jnp.sum(onehot_j * free_out_ref[...], axis=1, keepdims=True)
+    idle = waiting * (free_i <= t) * (free_j <= t)
+    # Earlier-claim counts per (flow, port): strict lower triangle over the
+    # flow axis contracted against the claim masks.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (f_pad, f_pad), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (f_pad, f_pad), 1)
+    tril = (rows > cols).astype(jnp.float32)
+    prior_i = jax.lax.dot(
+        tril, onehot_i * waiting, preferred_element_type=jnp.float32
+    )
+    prior_j = jax.lax.dot(
+        tril, onehot_j * waiting, preferred_element_type=jnp.float32
+    )
+    blocked_i = jnp.sum(prior_i * onehot_i, axis=1, keepdims=True)
+    blocked_j = jnp.sum(prior_j * onehot_j, axis=1, keepdims=True)
+    start_ref[0] = idle * (blocked_i == 0) * (blocked_j == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def event_resolve_pallas(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    rel: jnp.ndarray,
+    mask: jnp.ndarray,
+    free_in: jnp.ndarray,
+    free_out: jnp.ndarray,
+    t: jnp.ndarray,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(G, F) endpoints + (G, N) port state -> (G, F) f32 start mask."""
+    if interpret is None:
+        interpret = use_interpret()
+    G, F = src.shape
+    # Lane-align both the flow axis (contracted through the (Fp, Fp)
+    # triangle) and the port axis; padded flows carry mask 0 and padded
+    # ports are never claimed, so both are inert.
+    src_p, _ = pad_to(src.astype(jnp.int32)[:, :, None], 1, LANE, value=0)
+    dst_p, _ = pad_to(dst.astype(jnp.int32)[:, :, None], 1, LANE, value=0)
+    rel_p, _ = pad_to(rel.astype(jnp.float32)[:, :, None], 1, LANE)
+    mask_p, _ = pad_to(mask.astype(jnp.float32)[:, :, None], 1, LANE)
+    fin_p, _ = pad_to(free_in.astype(jnp.float32), 1, LANE)
+    fout_p, _ = pad_to(free_out.astype(jnp.float32), 1, LANE)
+    f_pad, n_pad = src_p.shape[1], fin_p.shape[1]
+
+    start = pl.pallas_call(
+        functools.partial(
+            _event_resolve_kernel, f_pad=f_pad, n_pad=n_pad
+        ),
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, f_pad, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, f_pad, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, f_pad, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, f_pad, 1), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, n_pad), lambda g: (g, 0)),
+            pl.BlockSpec((1, n_pad), lambda g: (g, 0)),
+            pl.BlockSpec((1, 1), lambda g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, f_pad, 1), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, f_pad, 1), jnp.float32),
+        interpret=interpret,
+        name="event_resolve",
+    )(src_p, dst_p, rel_p, mask_p, fin_p, fout_p, t[:, None].astype(jnp.float32))
+    return start[:, :F, 0]

@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the event_resolve kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.event_resolve.kernel import event_resolve_pallas
+from repro.kernels.event_resolve.ref import event_resolve_ref
+
+__all__ = ["event_resolve", "event_resolve_ref"]
+
+
+def event_resolve(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    rel: jnp.ndarray,
+    free_in: jnp.ndarray,
+    free_out: jnp.ndarray,
+    pending: jnp.ndarray,
+    t: jnp.ndarray,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Reserving-round start mask (G, F) bool; Pallas kernel or jnp oracle."""
+    if use_kernel:
+        out = event_resolve_pallas(
+            src, dst, rel, pending.astype(jnp.float32), free_in, free_out, t
+        )
+        return out > 0.5
+    return event_resolve_ref(src, dst, rel, free_in, free_out, pending, t)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the event_resolve kernel.
+
+One resolution round of the *reserving* discipline for a batch of
+(instance, core) members — the array form of
+`repro.core.circuit.resolve_event`, which the batched event-calendar
+scheduler (`repro.pipeline.batch_circuit`) executes per event: a flow
+establishes at ``t`` iff it is waiting (pending and released), both its
+ports are idle, and it is the first waiting flow on each of them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def event_resolve_ref(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    rel: jnp.ndarray,
+    free_in: jnp.ndarray,
+    free_out: jnp.ndarray,
+    pending: jnp.ndarray,
+    t: jnp.ndarray,
+) -> jnp.ndarray:
+    """Start mask of one reserving round per member.
+
+    Args:
+      src/dst: (G, F) int32 port endpoints, priority order.
+      rel: (G, F) f32 release times.
+      free_in/free_out: (G, N) f32 port free times.
+      pending: (G, F) bool.
+      t: (G,) f32 decision instants.
+
+    Returns: (G, F) bool — flows that establish at ``t`` this round.
+    """
+    G, F = src.shape
+    t_ = t[:, None]
+    waiting = pending & (rel <= t_)
+    idle = (
+        waiting
+        & (jnp.take_along_axis(free_in, src, axis=1) <= t_)
+        & (jnp.take_along_axis(free_out, dst, axis=1) <= t_)
+    )
+    ar = jnp.arange(F, dtype=jnp.int32)
+    claim = jnp.where(waiting, ar[None, :], F).astype(jnp.int32)
+
+    def first(ports, idx, n):
+        return jnp.full((n,), F, jnp.int32).at[ports].min(idx)
+
+    n = free_in.shape[1]
+    fi = jax.vmap(lambda s, c: first(s, c, n))(src, claim)
+    fj = jax.vmap(lambda d, c: first(d, c, n))(dst, claim)
+    return (
+        idle
+        & (ar[None, :] == jnp.take_along_axis(fi, src, axis=1))
+        & (ar[None, :] == jnp.take_along_axis(fj, dst, axis=1))
+    )

@@ -1,0 +1,628 @@
+"""Ensemble-batched intra-core circuit scheduling (Alg. 1 Lines 16-30, JAX).
+
+The NumPy reference `repro.core.circuit.schedule_core` walks one core's
+event calendar in a Python loop: at each decision instant it resolves the
+event with the array-form primitive `resolve_event` (idle test + first-
+waiting-per-port reduction), then advances to the next release or
+port-free time.  After PR 3 batched allocation, this per-(instance, core)
+loop became the dominant post-LP cost of every figure sweep.
+
+Here the identical event calendar executes for the whole flattened
+(ensemble x core) axis at once, through one of two bit-identical
+executors behind `schedule_batch` (selected like the Pallas kernels
+select interpret mode: the JAX program on accelerators, the lockstep
+NumPy pair engine `_run_calendar_wide` on hosts).  In the JAX executor,
+each member g is one (instance, core) pair with its flows padded to a
+shared length Fmax and its ports to Nmax; one bounded
+`jax.lax.while_loop` (vmapped across members) carries
+
+  * port free-time vectors ``free_in`` / ``free_out``  (G, Nmax),
+  * per-flow ``establish`` / ``complete`` / ``pending``  (G, Fmax),
+  * the member clock ``t``,
+
+and every iteration performs one resolution round of `resolve_event` —
+the same first-occurrence start set for both disciplines (reserving
+claims = waiting flows, greedy claims = idle flows) — fused, when the
+round is provably complete, with one clock advance to the next event.
+
+Lockstep iterations are the scarce resource (the whole batch steps while
+the largest member finishes its calendar), so the round is engineered
+scatter-free around a few (G, Fmax) passes:
+
+  * the per-port first-claimer reduction is an exclusive segment-min over
+    the flow axis, computed as one integer `cummin` over flows presorted
+    by port (host-side, static per call) with per-segment offsets — no
+    scatter, exact in int32;
+  * port free times update through (G, Nmax) gathers of each port's
+    first claimer (only the first claimer on a port can have started);
+  * the clock advance fuses into the same iteration unless another round
+    at this instant is possible: for reserving that is only a
+    zero-duration start (a started port stays free and its next waiting
+    flow chains at the same t); for greedy any idle-but-blocked leftover
+    (its blocker may have started and freed nothing it needs).
+
+The calendar is bounded: every flow contributes at most a handful of
+rounds and every advance lands on a distinct release or port-free value
+(at most F each), so ``3 * Fmax + 4`` iterations always suffice and the
+`while_loop` is compile-time bounded.
+
+Padding semantics mirror `batch_alloc`:
+
+  * padded flows start with ``pending=False``, sort into a sentinel port
+    segment past every real port, and can never claim, start, or
+    contribute event times;
+  * padded members (bucket rounding) have no pending flows and finish on
+    iteration zero;
+  * padded ports are never indexed by real flows.
+
+All times are f64 (locally enabled x64) and the per-round operations are
+pure selections (compares, min/max, ``t + dur`` with ``dur`` precomputed
+exactly as the oracle's ``delta + size / rate``), so establishment and
+completion times are **bit-identical** to `schedule_core` on both
+disciplines — fuzz-asserted by `tests/test_batch_circuit.py`.
+
+Shapes are rounded up to small quanta so repeated sweeps, schemes and
+disciplines over similar ensembles reuse one compiled program per padded
+bucket instead of recompiling per call.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.allocation import Allocation
+from repro.core.circuit import NOT_SCHEDULED, CoreSchedule
+from repro.core.coflow import CoflowInstance
+from repro.core.validate import ccts_from_schedules
+
+__all__ = ["schedule_batch", "member_tables", "event_bound"]
+
+# Bucket quanta: flows, ports and members round up to these so that
+# near-shaped ensembles (e.g. the same sweep under both disciplines, or
+# schemes sharing an allocation) hit one compiled program per bucket.
+_F_QUANTUM = 16
+_N_QUANTUM = 4
+_G_QUANTUM = 8
+
+
+def event_bound(num_flows: int) -> int:
+    """Compile-time iteration bound of the padded event calendar.
+
+    At most ``num_flows`` rounds start flows (each starts >= 1), and every
+    no-start round advances the clock to a new event value drawn from the
+    <= F distinct releases plus <= F port-free (completion) times.  (The
+    wide CPU engine may additionally stop at each of the <= F release
+    instants themselves, so it budgets one more F.)
+    """
+    return 3 * num_flows + 4
+
+
+def _round_up(n: int, q: int) -> int:
+    return -(-max(n, 1) // q) * q
+
+
+def member_tables(
+    instance: CoflowInstance, alloc: Allocation, order: np.ndarray
+) -> list[dict]:
+    """Per-core flow tables of one instance, in scheduling priority order.
+
+    Returns one dict per core with the (F_k,) arrays `schedule_core` would
+    sort internally — coflow/src/dst/size plus the derived ``rel`` and
+    ``dur`` vectors — so the batched calendar consumes exactly the
+    oracle's inputs (and its output arrays line up position for position).
+    """
+    from repro.core.scheduler import _flow_priorities
+
+    M, K = instance.num_coflows, instance.num_cores
+    prio = _flow_priorities(alloc, order, M)
+    out = []
+    for k in range(K):
+        sel = alloc.core == k
+        o = np.argsort(prio[sel], kind="stable")
+        coflow = alloc.coflow[sel][o]
+        size = alloc.size[sel][o]
+        rate = float(instance.rates[k])
+        out.append(
+            dict(
+                coflow=coflow,
+                src=alloc.src[sel][o],
+                dst=alloc.dst[sel][o],
+                size=size,
+                rel=instance.releases[coflow],
+                dur=instance.delta + size / rate,
+                rate=rate,
+            )
+        )
+    return out
+
+
+def _port_segments(keys: np.ndarray, n_pad: int):
+    """Sort metadata for the exclusive segment-min over one port axis.
+
+    ``keys`` (G, Fmax) holds each flow's port (``n_pad`` for padded flows,
+    a sentinel segment past every real port).  Returns per-member arrays:
+    ``perm`` (G, Fmax) — stable sort of flows by port; ``offs`` (G, Fmax)
+    — per-sorted-position segment offsets ``(n_pad - port) * (Fmax + 1)``,
+    strictly decreasing across segments so a running `cummin` never leaks
+    a value across a boundary; ``segend`` / ``segempty`` (G, n_pad) — the
+    last sorted position of each real port's segment (clamped) and whether
+    the segment is empty.
+    """
+    G, F = keys.shape
+    perm = np.argsort(keys, axis=1, kind="stable").astype(np.int32)
+    sorted_keys = np.take_along_axis(keys, perm, axis=1)
+    offs = ((n_pad - sorted_keys) * (F + 1)).astype(np.int32)
+    ports = np.arange(n_pad)
+    segend = np.empty((G, n_pad), dtype=np.int32)
+    segempty = np.empty((G, n_pad), dtype=bool)
+    for g in range(G):
+        right = np.searchsorted(sorted_keys[g], ports, side="right")
+        left = np.searchsorted(sorted_keys[g], ports, side="left")
+        segempty[g] = left == right
+        segend[g] = np.clip(right - 1, 0, F - 1)
+    return perm, offs, segend, segempty
+
+
+@functools.partial(jax.jit, static_argnames=("reserving", "bound"))
+def _run_calendar(
+    src, dst, rel, dur, pending0, free0,
+    psrc, soff, send, sempty, pdst, doff, dend, dempty,
+    reserving, bound,
+):
+    """Execute the padded event calendar for all members.
+
+    Shapes: src/dst/psrc/pdst (G, Fmax) i32, rel/dur (G, Fmax) f64,
+    pending0 (G, Fmax) bool, free0 (G, Nmax) f64 zeros, soff/doff
+    (G, Fmax) i32, send/dend (G, Nmax) i32, sempty/dempty (G, Nmax) bool.
+    Returns (establish, complete) (G, Fmax) f64 plus per-member
+    ``unfinished`` / ``stalled`` flags (bound exhausted / no event time
+    could advance the clock — both impossible for well-formed inputs,
+    checked on host).
+    """
+    G, F = src.shape
+    n_pad = free0.shape[1]
+    port_off = ((n_pad - jnp.arange(n_pad)) * (F + 1)).astype(jnp.int32)
+
+    def member(src, dst, rel, dur, pending0, free0,
+               psrc, soff, send, sempty, pdst, doff, dend, dempty):
+        ar = jnp.arange(F, dtype=jnp.int32)
+        t0 = jnp.min(jnp.where(pending0, rel, jnp.inf))
+
+        def first_claimer(claim, perm, offs, segend, segempty):
+            # Exclusive segment-min of claiming flow indices per port:
+            # int32 cummin over the port-sorted flow axis; descending
+            # per-segment offsets keep segments independent.
+            w = jnp.where(claim[perm], perm, F) + offs
+            cm = jax.lax.cummin(w)
+            first = cm[segend] - port_off
+            return jnp.where(segempty, F, first)
+
+        def cond(carry):
+            _, _, _, _, pending, _, it, stalled = carry
+            return jnp.any(pending) & ~stalled & (it < bound)
+
+        def body(carry):
+            free_in, free_out, est, comp, pending, t, it, stalled = carry
+            waiting = pending & (rel <= t)
+            idle = waiting & (free_in[src] <= t) & (free_out[dst] <= t)
+            claim = waiting if reserving else idle
+            fi = first_claimer(claim, psrc, soff, send, sempty)
+            fj = first_claimer(claim, pdst, doff, dend, dempty)
+            start = idle & (ar == fi[src]) & (ar == fj[dst])
+            est = jnp.where(start, t, est)
+            comp = jnp.where(start, t + dur, comp)
+            # Only a port's first claimer can have started; if it did, the
+            # port frees at that flow's completion — two (Nmax,) gathers
+            # instead of a scatter.
+            fic = jnp.clip(fi, 0, F - 1)
+            fjc = jnp.clip(fj, 0, F - 1)
+            free_in = jnp.where(
+                (fi < F) & start[fic], t + dur[fic], free_in
+            )
+            free_out = jnp.where(
+                (fj < F) & start[fjc], t + dur[fjc], free_out
+            )
+            pending = pending & ~start
+            # Advance fuses into this iteration unless another round at t
+            # is possible: a zero-duration start chains its port's next
+            # waiting flow (reserving), and any idle-but-blocked leftover
+            # may start once its blocker is gone (greedy).
+            if reserving:
+                advance = ~jnp.any(start & (dur == 0.0))
+            else:
+                advance = ~jnp.any(idle & ~start)
+            times = jnp.where(
+                pending,
+                jnp.maximum(
+                    rel, jnp.maximum(free_in[src], free_out[dst])
+                ),
+                jnp.inf,
+            )
+            t_next = jnp.min(jnp.where(times > t, times, jnp.inf))
+            stall = advance & jnp.any(pending) & jnp.isinf(t_next)
+            t = jnp.where(advance, t_next, t)
+            return (
+                free_in, free_out, est, comp, pending, t, it + 1,
+                stalled | stall,
+            )
+
+        init = (
+            free0,
+            free0,
+            jnp.full((F,), NOT_SCHEDULED, rel.dtype),
+            jnp.full((F,), NOT_SCHEDULED, rel.dtype),
+            pending0,
+            t0,
+            jnp.int32(0),
+            jnp.bool_(False),
+        )
+        out = jax.lax.while_loop(cond, body, init)
+        _, _, est, comp, pending, _, _, stalled = out
+        return est, comp, jnp.any(pending), stalled
+
+    return jax.vmap(member)(
+        src, dst, rel, dur, pending0, free0,
+        psrc, soff, send, sempty, pdst, doff, dend, dempty,
+    )
+
+
+def _run_calendar_wide(
+    src, dst, rel, dur, valid, num_ports, reserving, bound, labels=None
+):
+    """CPU execution of the same padded event calendar, lockstep in NumPy.
+
+    XLA:CPU pays milliseconds per `while_loop` iteration at sweep sizes
+    (serial gathers, carry copies), so on hosts the calendar runs here:
+    the identical round/advance semantics, restructured around per-port-
+    *pair* head pointers so one round costs O(N^2) instead of O(F) per
+    member — flows of one (ingress, egress) pair share both ports, hence
+    execute sequentially, hence only each pair's first waiting flow (its
+    head) can ever claim or start.  Rounds evaluate the (G, N, N)
+    candidate matrix (row/column minima reproduce `resolve_event`'s
+    first-claimer-per-port pass exactly); heads advance past started and
+    not-yet-released flows and rewind when a release lands before them.
+    The clock may additionally stop at release instants whose flows then
+    turn out blocked — no-op rounds that leave the schedule untouched —
+    so ``bound`` carries one extra F of slack over `event_bound`.
+
+    Members drop out of the lockstep batch as they finish.  Identical
+    f64 selections as `_run_calendar` and `schedule_core`: bit-exact.
+    """
+    G, F = src.shape
+    N = int(num_ports)
+    P = N * N
+    NOT = NOT_SCHEDULED
+    out_est = np.full((G, F), NOT)
+    out_comp = np.full((G, F), NOT)
+    if G == 0 or F == 0:
+        return out_est, out_comp
+
+    pairid = np.where(valid, src.astype(np.int64) * N + dst, P)
+    psort = np.argsort(pairid, axis=1, kind="stable")
+    keys = np.take_along_axis(pairid, psort, 1)
+    pos = np.empty((G, F), dtype=np.int64)
+    np.put_along_axis(
+        pos, psort, np.broadcast_to(np.arange(F), (G, F)), 1
+    )
+    pairstart = np.empty((G, P), dtype=np.int64)
+    pairend = np.empty((G, P), dtype=np.int64)
+    ports = np.arange(P)
+    for g in range(G):
+        pairstart[g] = np.searchsorted(keys[g], ports, side="left")
+        pairend[g] = np.searchsorted(keys[g], ports, side="right")
+    # Release calendar per member: flows grouped by release instant; the
+    # t0 group needs no rewind (heads start at the segment fronts).
+    groups: list[list] = []
+    t0 = np.empty(G)
+    for g in range(G):
+        fids = np.nonzero(valid[g])[0]
+        if fids.size == 0:  # quantum-padded member: drops out at entry
+            groups.append([])
+            t0[g] = np.inf
+            continue
+        o = np.argsort(rel[g, fids], kind="stable")
+        fs = fids[o]
+        uniq, starts = np.unique(rel[g, fs], return_index=True)
+        bounds = list(starts) + [fs.size]
+        groups.append(
+            [
+                (uniq[i], fs[bounds[i]:bounds[i + 1]])
+                for i in range(len(uniq))
+            ]
+        )
+        t0[g] = uniq[0]
+    ptr = np.ones(G, dtype=np.int64)
+    next_rel = np.array(
+        [g[1][0] if len(g) > 1 else np.inf for g in groups]
+    )
+
+    PI = ports // N  # static pair -> ingress port
+    PJ = ports % N  # static pair -> egress port
+    h = pairstart.copy()
+    free_in = np.zeros((G, N))
+    free_out = np.zeros((G, N))
+    est = np.full((G, F), NOT)
+    comp = np.full((G, F), NOT)
+    pending = valid.copy()
+    remaining = valid.sum(1)
+    t = t0
+    orig = np.arange(G)
+    it = 0
+
+    live = remaining > 0
+    if not live.all():
+        (orig, h, pairstart, pairend, psort, pos, pairid, rel, dur,
+         pending, est, comp, free_in, free_out, remaining, t, ptr,
+         next_rel) = (
+            a[live] for a in (
+                orig, h, pairstart, pairend, psort, pos, pairid, rel,
+                dur, pending, est, comp, free_in, free_out, remaining,
+                t, ptr, next_rel,
+            )
+        )
+        groups = [grp for g, grp in enumerate(groups) if live[g]]
+
+    while orig.size:
+        it += 1
+        if it > bound:  # pragma: no cover - bound is provably large
+            who = ", ".join(
+                labels[g] if labels and g < len(labels) else f"member {g}"
+                for g in sorted(set(orig.tolist()))
+            )
+            raise RuntimeError(
+                f"batched scheduler exceeded the event bound ({who})"
+            )
+        Ga = orig.size
+        t_ = t[:, None]
+        base = (np.arange(Ga) * F)[:, None]
+        # Head maintenance: skip started and not-yet-released flows (a
+        # release rewind restores the latter when their instant arrives).
+        while True:
+            hv = h < pairend
+            hc = np.minimum(h, F - 1)
+            c = psort.ravel()[hc + base]
+            cf = c + base
+            pend_c = pending.ravel()[cf]
+            rel_c = rel.ravel()[cf]
+            skip = hv & (~pend_c | (rel_c > t_))
+            if not skip.any():
+                break
+            h = h + skip
+        waitc = hv & (rel_c <= t_)
+        FI = free_in[:, PI]
+        FO = free_out[:, PJ]
+        idlec = waitc & (FI <= t_) & (FO <= t_)
+        claim = waitc if reserving else idlec
+        # resolve_event in pair space: claimed head ids, first claimer
+        # per ingress (row min) and egress (column min).
+        cl = np.where(claim, c, F)
+        clm = cl.reshape(Ga, N, N)
+        rowfirst = clm.min(2)
+        colfirst = clm.min(1)
+        start = idlec & (cl == rowfirst[:, PI]) & (cl == colfirst[:, PJ])
+
+        dur_c = dur.ravel()[cf]
+        end_c = t_ + dur_c
+        sm = start.reshape(Ga, N, N)
+        ev = np.where(start, end_c, -np.inf).reshape(Ga, N, N)
+        row_has = sm.any(2)
+        col_has = sm.any(1)
+        free_in = np.where(row_has, ev.max(2), free_in)
+        free_out = np.where(col_has, ev.max(1), free_out)
+        gs, ps = np.nonzero(start)
+        if gs.size:
+            fstart = c[gs, ps]
+            est[gs, fstart] = t[gs]
+            comp[gs, fstart] = end_c[gs, ps]
+            pending[gs, fstart] = False
+            h[gs, ps] += 1
+            remaining -= np.bincount(gs, minlength=Ga)
+        # Another round at this instant is possible only if an idle
+        # candidate was left blocked (greedy backfill) or a zero-duration
+        # start chained its pair's next flow at the same t.
+        chained = (start & (dur_c == 0.0)).any(1)
+        if reserving:
+            more = chained
+        else:
+            more = chained | (idlec & ~start).any(1)
+        # Next event per pair: its ports' post-round free times (the new
+        # head's own release, if later, surfaces as a release stop).
+        hv2 = h < pairend
+        pt = np.where(hv2, np.maximum(free_in[:, PI], free_out[:, PJ]), np.inf)
+        times = np.where(pt > t_, pt, np.inf).min(1)
+        tn = np.minimum(times, np.where(next_rel > t, next_rel, np.inf))
+        adv = ~more
+        alive = remaining > 0
+        stall = adv & alive & ~np.isfinite(tn)
+        if stall.any():
+            bad = int(orig[stall][0])
+            who = (
+                labels[bad] if labels and bad < len(labels)
+                else f"member {bad}"
+            )
+            raise RuntimeError(f"batched scheduler stalled ({who})")
+        t = np.where(adv & alive, tn, t)
+        # Release crossings: rewind heads of pairs whose newly released
+        # flows land before the current head.
+        for gi in np.nonzero(adv & alive & (next_rel <= t))[0]:
+            grp = groups[gi]
+            while ptr[gi] < len(grp) and grp[ptr[gi]][0] <= t[gi]:
+                _, flows = grp[ptr[gi]]
+                np.minimum.at(h[gi], pairid[gi, flows], pos[gi, flows])
+                ptr[gi] += 1
+            next_rel[gi] = (
+                grp[ptr[gi]][0] if ptr[gi] < len(grp) else np.inf
+            )
+        # Finished members no-op harmlessly inside the lockstep batch, so
+        # compact (array copies) only once enough of them accumulate.
+        ndone = Ga - int(alive.sum())
+        if ndone and (4 * ndone >= Ga or ndone == Ga):
+            done = ~alive
+            out_est[orig[done]] = est[done]
+            out_comp[orig[done]] = comp[done]
+            (orig, h, pairstart, pairend, psort, pos, pairid, rel, dur,
+             pending, est, comp, free_in, free_out, remaining, t, ptr,
+             next_rel) = (
+                a[alive] for a in (
+                    orig, h, pairstart, pairend, psort, pos, pairid,
+                    rel, dur, pending, est, comp, free_in, free_out,
+                    remaining, t, ptr, next_rel,
+                )
+            )
+            groups = [
+                grp for g, grp in enumerate(groups) if alive[g]
+            ]
+    return out_est, out_comp
+
+
+def schedule_batch(
+    instances: Sequence[CoflowInstance],
+    allocs: Sequence[Allocation],
+    orders: Sequence[np.ndarray],
+    discipline: str = "reserving",
+    engine: str = "auto",
+) -> list[tuple[list[CoreSchedule], np.ndarray]]:
+    """Circuit-schedule a whole ensemble in one vectorized program.
+
+    Equivalent to running `repro.core.scheduler._schedule_all_cores` (and
+    `ccts_from_schedules`) per instance, with bit-identical establishment
+    and completion times; returns one ``(core_schedules, ccts)`` pair per
+    instance, matching `CircuitStage.schedule`.
+
+    ``engine`` selects the calendar executor: ``"jax"`` (the vmapped
+    `lax.while_loop`, the accelerator path), ``"wide"`` (the lockstep
+    NumPy pair engine, the CPU path), or ``"auto"`` (wide on hosts
+    without an accelerator, mirroring the kernels' interpret-mode
+    convention).  Both are bit-identical to the oracle and to each other.
+    """
+    if discipline not in ("reserving", "greedy"):
+        raise ValueError(f"unknown discipline {discipline!r}")
+    if engine not in ("auto", "jax", "wide"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "auto":
+        from repro.kernels.common import use_interpret
+
+        engine = "wide" if use_interpret() else "jax"
+    instances = list(instances)
+    if not (len(instances) == len(allocs) == len(orders)):
+        raise ValueError("instances/allocs/orders length mismatch")
+    if not instances:
+        return []
+
+    tables = [
+        member_tables(inst, alloc, order)
+        for inst, alloc, order in zip(instances, allocs, orders)
+    ]
+    # Flatten (instance, core) members; empty cores skip the calendar and
+    # become empty CoreSchedules directly (matching schedule_core's F=0
+    # fast path).
+    members = []  # (b, k, table) with F_k > 0
+    for b, (inst, cores) in enumerate(zip(instances, tables)):
+        for k, tab in enumerate(cores):
+            if tab["coflow"].shape[0]:
+                members.append((b, k, tab))
+
+    if members:
+        G = _round_up(len(members), _G_QUANTUM)
+        Fmax = _round_up(
+            max(m[2]["coflow"].shape[0] for m in members), _F_QUANTUM
+        )
+        Nmax = _round_up(
+            max(inst.num_ports for inst in instances), _N_QUANTUM
+        )
+        src = np.zeros((G, Fmax), dtype=np.int32)
+        dst = np.zeros((G, Fmax), dtype=np.int32)
+        skey = np.full((G, Fmax), Nmax, dtype=np.int64)
+        dkey = np.full((G, Fmax), Nmax, dtype=np.int64)
+        rel = np.zeros((G, Fmax), dtype=np.float64)
+        dur = np.zeros((G, Fmax), dtype=np.float64)
+        pending = np.zeros((G, Fmax), dtype=bool)
+        for g, (_, _, tab) in enumerate(members):
+            F = tab["coflow"].shape[0]
+            src[g, :F] = tab["src"]
+            dst[g, :F] = tab["dst"]
+            skey[g, :F] = tab["src"]
+            dkey[g, :F] = tab["dst"]
+            rel[g, :F] = tab["rel"]
+            dur[g, :F] = tab["dur"]
+            pending[g, :F] = True
+        if engine == "wide":
+            est, comp = _run_calendar_wide(
+                src, dst, rel, dur, pending, Nmax,
+                reserving=discipline == "reserving",
+                bound=event_bound(Fmax) + Fmax,
+                labels=[
+                    f"instance {b}, core {k}" for b, k, _ in members
+                ],
+            )
+        else:
+            psrc, soff, send, sempty = _port_segments(skey, Nmax)
+            pdst, doff, dend, dempty = _port_segments(dkey, Nmax)
+            with enable_x64():
+                est, comp, unfinished, stalled = _run_calendar(
+                    jnp.asarray(src), jnp.asarray(dst), jnp.asarray(rel),
+                    jnp.asarray(dur), jnp.asarray(pending),
+                    jnp.zeros((G, Nmax), jnp.float64),
+                    jnp.asarray(psrc), jnp.asarray(soff),
+                    jnp.asarray(send), jnp.asarray(sempty),
+                    jnp.asarray(pdst), jnp.asarray(doff),
+                    jnp.asarray(dend), jnp.asarray(dempty),
+                    reserving=discipline == "reserving",
+                    bound=event_bound(Fmax),
+                )
+            est = np.asarray(est)
+            comp = np.asarray(comp)
+            unfinished = np.asarray(unfinished)
+            stalled = np.asarray(stalled)
+            for g, (b, k, _) in enumerate(members):
+                if stalled[g]:
+                    raise RuntimeError(
+                        f"batched scheduler stalled (instance {b}, core {k})"
+                    )
+                if unfinished[g]:  # pragma: no cover - bound is large
+                    raise RuntimeError(
+                        f"batched scheduler exceeded the event bound "
+                        f"(instance {b}, core {k})"
+                    )
+
+    schedules_by_member = {
+        (b, k): g for g, (b, k, _) in enumerate(members)
+    }
+    out = []
+    for b, (inst, cores) in enumerate(zip(instances, tables)):
+        schedules = []
+        for k, tab in enumerate(cores):
+            F = tab["coflow"].shape[0]
+            if F == 0:
+                z = np.zeros(0)
+                zi = np.zeros(0, dtype=np.int64)
+                schedules.append(
+                    CoreSchedule(
+                        zi, zi, zi, z, z, z, tab["rate"], inst.delta
+                    )
+                )
+                continue
+            g = schedules_by_member[b, k]
+            schedules.append(
+                CoreSchedule(
+                    coflow=tab["coflow"],
+                    src=tab["src"],
+                    dst=tab["dst"],
+                    size=tab["size"],
+                    establish=est[g, :F].copy(),
+                    complete=comp[g, :F].copy(),
+                    rate=tab["rate"],
+                    delta=inst.delta,
+                )
+            )
+        out.append(
+            (schedules, ccts_from_schedules(inst.num_coflows, schedules))
+        )
+    return out

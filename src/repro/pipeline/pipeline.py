@@ -7,10 +7,12 @@
     `repro.core.scheduler.run` (which now delegates here);
   * `run_batch(ensemble)` — batch-first: consumes the shared LP solutions
     of `lp.solve_subgradient_batch` / `experiments.solve_ensemble_lp`
-    directly and executes the allocation stage vectorized across the
-    ensemble axis (`repro.pipeline.batch_alloc`), falling back to the
-    per-instance loop only for allocation stages without a batched form
-    (``require_batch=True`` turns that fallback into an error).
+    directly and executes both the allocation stage
+    (`repro.pipeline.batch_alloc`) and the list-scheduler circuit stage
+    (`repro.pipeline.batch_circuit`) vectorized across the ensemble axis,
+    falling back to the per-instance loop only for stages without a
+    batched form (``require_batch=True`` turns a fallback of a
+    batch-capable stage into an error).
 
 `build_pipeline` materializes a declarative `SchemeSpec` into stages via
 per-kind factories — scheme *names* never drive execution, only stage
@@ -85,6 +87,13 @@ class Pipeline:
             "alloc", st.kind, getattr(st, "include_tau", None),
         ) + self._order_key()
 
+    def _circuit_key(self) -> tuple:
+        st = self.circuit_stage
+        return (
+            "circuit", st.kind,
+            getattr(st, "discipline", None), getattr(st, "backend", None),
+        ) + self._alloc_key()
+
     def run_batch(
         self,
         instances: Sequence[CoflowInstance],
@@ -97,16 +106,20 @@ class Pipeline:
 
         ``lp_solutions`` plugs the output of `solve_subgradient_batch` /
         `solve_ensemble_lp` straight in (one solution per instance, input
-        order).  Each result's ``wall_time_s`` covers only that instance's
-        circuit stage plus its amortized share of the batched allocation.
+        order).  Each result's ``wall_time_s`` covers that instance's
+        circuit stage (its own loop time, or its amortized share of the
+        batched calendar) plus its amortized share of the batched
+        allocation.
 
         ``stage_cache`` shares computed stage outputs between pipelines
         run over the *same* ``(instances, lp_solutions)``: pass one dict
         to every scheme's `run_batch` and schemes that differ only in
         their circuit stage (e.g. OURS / SUNFLOW-S / BvN-S) reuse one
-        ordering pass and one batched allocation instead of recomputing
-        them per scheme.  The cache is keyed by stage kind + config, so it
-        must not be reused across different ensembles.
+        ordering pass and one batched allocation — and pipelines that
+        differ only in circuit *discipline* (e.g. greedy vs reserving
+        OURS, as `sweep(certify=True)` runs) additionally share everything
+        up to the circuit stage.  The cache is keyed by stage kind +
+        config, so it must not be reused across different ensembles.
         """
         instances = list(instances)
         B = len(instances)
@@ -152,12 +165,56 @@ class Pipeline:
                 stage_cache[self._alloc_key()] = allocs
         alloc_share = (time.perf_counter() - t0) / max(B, 1)
 
-        results = []
-        for inst, (order, lp_sol), alloc in zip(instances, ordered, allocs):
+        # Circuit stage: batched across the ensemble when the stage has a
+        # batched form (`ListCircuit` backend "batch"); stages without one
+        # (sequential / bvn / fluid — baselines whose calendars are
+        # inherently per-instance) run the loop.  ``require_batch`` turns
+        # a *fallback* of a batch-capable stage (e.g. backend "loop") into
+        # an error, but leaves loop-only stages alone.
+        per_instance_s = None
+        circuit_share = 0.0
+        pairs = None if stage_cache is None else stage_cache.get(
+            self._circuit_key()
+        )
+        if pairs is None:
             t1 = time.perf_counter()
-            schedules, ccts = self.circuit_stage.schedule(inst, alloc, order)
+            batch_fn = getattr(self.circuit_stage, "schedule_batch", None)
+            pairs = (
+                batch_fn(instances, allocs, orders)
+                if batch_fn is not None
+                else None
+            )
+            if pairs is None:
+                if require_batch and batch_fn is not None:
+                    raise RuntimeError(
+                        f"run_batch fell back to the per-instance circuit "
+                        f"loop for scheme {self.spec.key!r} (circuit stage "
+                        f"{type(self.circuit_stage).__name__}, backend "
+                        f"{getattr(self.circuit_stage, 'backend', None)!r})"
+                    )
+                pairs, per_instance_s = [], []
+                for inst, order, alloc in zip(instances, orders, allocs):
+                    t2 = time.perf_counter()
+                    pairs.append(
+                        self.circuit_stage.schedule(inst, alloc, order)
+                    )
+                    per_instance_s.append(time.perf_counter() - t2)
+            else:
+                circuit_share = (time.perf_counter() - t1) / max(B, 1)
+            if stage_cache is not None:
+                stage_cache[self._circuit_key()] = pairs
+
+        results = []
+        for i, (inst, (order, lp_sol), alloc) in enumerate(
+            zip(instances, ordered, allocs)
+        ):
+            schedules, ccts = pairs[i]
             if validate and schedules is not None:
                 validate_schedule(inst, schedules)
+            wall = alloc_share + (
+                per_instance_s[i] if per_instance_s is not None
+                else circuit_share
+            )
             results.append(
                 ScheduleResult(
                     scheme=self.spec.name,
@@ -167,7 +224,7 @@ class Pipeline:
                     ccts=ccts,
                     total_weighted_cct=total_weighted_cct(inst, ccts),
                     lp=lp_sol,
-                    wall_time_s=time.perf_counter() - t1 + alloc_share,
+                    wall_time_s=wall,
                 )
             )
         return results
@@ -184,10 +241,10 @@ _ORDER_STAGES = {
 }
 
 _CIRCUIT_STAGES = {
-    "list": lambda discipline: st.ListCircuit(discipline),
-    "sequential": lambda discipline: st.SequentialCircuit(),
-    "bvn": lambda discipline: st.BvnCircuit(),
-    "fluid": lambda discipline: st.FluidCircuit(),
+    "list": lambda discipline, backend: st.ListCircuit(discipline, backend),
+    "sequential": lambda discipline, backend: st.SequentialCircuit(),
+    "bvn": lambda discipline, backend: st.BvnCircuit(),
+    "fluid": lambda discipline, backend: st.FluidCircuit(),
 }
 
 
@@ -197,12 +254,17 @@ def build_pipeline(
     discipline: str = "greedy",
     lp_method: str = "exact",
     lp_iters: int = 3000,
+    circuit_backend: str = "batch",
 ) -> Pipeline:
     """Materialize a `SchemeSpec` into an executable `Pipeline`.
 
     ``discipline`` applies to list-scheduler circuits whose spec leaves it
     open (the spec's own pin wins); ``lp_method``/``lp_iters`` configure
     LP-ordering stages that have to solve for themselves.
+    ``circuit_backend`` selects the list scheduler's `run_batch` engine:
+    ``"batch"`` (default — the whole-ensemble padded event calendar) or
+    ``"loop"`` (per-instance NumPy oracle); stages without a batched form
+    ignore it.
     """
     try:
         order_stage = _ORDER_STAGES[spec.order](lp_method, lp_iters)
@@ -210,7 +272,7 @@ def build_pipeline(
         raise ValueError(f"unknown order stage kind {spec.order!r}") from None
     try:
         circuit_stage = _CIRCUIT_STAGES[spec.circuit](
-            spec.discipline or discipline
+            spec.discipline or discipline, circuit_backend
         )
     except KeyError:
         raise ValueError(

@@ -7,12 +7,15 @@ Algorithm 1's three phases, as pluggable objects:
     optional ensemble-batched path (`allocate_batch`);
   * `CircuitStage`  — intra-core scheduling (Lines 16–30 / the scheduling
     baselines), returning per-core schedules (when circuit structures are
-    kept) and the realized per-coflow CCT vector.
+    kept) and the realized per-coflow CCT vector, with an optional
+    ensemble-batched path (`schedule_batch`).
 
 Stages are tiny adapters over the reference implementations in
-`repro.core.*`; the per-instance NumPy paths stay the oracle and the only
-genuinely new compute path is `repro.pipeline.batch_alloc`'s vectorized
-allocation, which `GreedyAllocate.allocate_batch` exposes.
+`repro.core.*`; the per-instance NumPy paths stay the oracle, and the
+batched compute paths are `repro.pipeline.batch_alloc` (vectorized
+allocation, via `GreedyAllocate.allocate_batch`) and
+`repro.pipeline.batch_circuit` (the padded event-calendar list scheduler,
+via `ListCircuit.schedule_batch`).
 """
 
 from __future__ import annotations
@@ -98,6 +101,10 @@ class CircuitStage(Protocol):
     ) -> tuple[list[CoreSchedule] | None, np.ndarray]:
         ...
 
+    # Optional: `schedule_batch(instances, allocs, orders) ->
+    # list[(schedules, ccts)] | None` for ensemble execution; absent or
+    # None means fall back to the per-instance loop.
+
 
 # ---------------------------------------------------------------------------
 # Ordering stages
@@ -176,18 +183,39 @@ class GreedyAllocate:
 
 
 class ListCircuit:
-    """Not-all-stop greedy port-matching list scheduler (Lines 16–30)."""
+    """Not-all-stop greedy port-matching list scheduler (Lines 16–30).
+
+    Two backends with bit-identical schedules: ``"batch"`` (default) runs
+    the whole ensemble's padded event calendar as one JAX program
+    (`repro.pipeline.batch_circuit`); ``"loop"`` keeps the per-instance
+    NumPy event loop — the parity oracle and the explicit fallback,
+    mirroring the ``alloc="batch"|"loop"`` convention.  ``schedule_batch``
+    returns None under the loop backend so `Pipeline.run_batch` can fall
+    back (or error under ``require_batch``).
+    """
 
     kind = "list"
 
-    def __init__(self, discipline: str = "greedy"):
+    def __init__(self, discipline: str = "greedy", backend: str = "batch"):
+        if backend not in ("batch", "loop"):
+            raise ValueError(f"unknown circuit backend {backend!r}")
         self.discipline = discipline
+        self.backend = backend
 
     def schedule(self, instance, alloc, order):
         schedules = _schedule_all_cores(
             instance, alloc, order, discipline=self.discipline
         )
         return schedules, ccts_from_schedules(instance.num_coflows, schedules)
+
+    def schedule_batch(self, instances, allocs, orders):
+        if self.backend != "batch":
+            return None
+        from repro.pipeline.batch_circuit import schedule_batch
+
+        return schedule_batch(
+            instances, allocs, orders, discipline=self.discipline
+        )
 
 
 class SequentialCircuit:

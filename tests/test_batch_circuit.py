@@ -1,0 +1,259 @@
+"""Bit-parity fuzz tests for the ensemble-batched circuit stage.
+
+`repro.pipeline.batch_circuit.schedule_batch` must reproduce the NumPy
+event loop (`schedule_core` via `_schedule_all_cores`) **bit for bit** on
+both disciplines: establishment/completion times, schedule array layouts,
+and the derived CCT vectors — across mixed shapes, zero and arbitrary
+release times, zero-duration flows, empty cores and single-flow cores.
+On top sits a `run_batch` end-to-end CCT parity grid over every
+registered scheme (batched LP-ordered pipelines included).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import pipeline
+from repro.core import lp
+from repro.core.allocation import Allocation, allocate
+from repro.core.circuit import NOT_SCHEDULED
+from repro.core.ordering import wspt_order
+from repro.core.scheduler import _schedule_all_cores
+from repro.core.validate import ccts_from_schedules, validate_schedule
+from repro.pipeline.batch_circuit import event_bound, schedule_batch
+from repro.traffic.instances import random_instance
+
+DISCIPLINES = ["reserving", "greedy"]
+
+_SCHED_FIELDS = ("coflow", "src", "dst", "size", "establish", "complete")
+
+
+def _assert_schedules_identical(got, ref, ctx):
+    assert len(got) == len(ref), ctx
+    for k, (a, b) in enumerate(zip(got, ref)):
+        for f in _SCHED_FIELDS:
+            x, y = getattr(a, f), getattr(b, f)
+            assert x.dtype == y.dtype and x.shape == y.shape, (ctx, k, f)
+            assert np.array_equal(x, y), (ctx, k, f)
+        assert a.rate == b.rate and a.delta == b.delta, (ctx, k)
+
+
+def _batch_vs_loop(instances, discipline, engine="auto"):
+    orders = [wspt_order(inst) for inst in instances]
+    allocs = [allocate(inst, o) for inst, o in zip(instances, orders)]
+    got = schedule_batch(
+        instances, allocs, orders, discipline=discipline, engine=engine
+    )
+    assert len(got) == len(instances)
+    for inst, alloc, order, (schedules, ccts) in zip(
+        instances, allocs, orders, got
+    ):
+        ref = _schedule_all_cores(
+            inst, alloc, order, discipline=discipline
+        )
+        _assert_schedules_identical(schedules, ref, discipline)
+        assert np.array_equal(
+            ccts, ccts_from_schedules(inst.num_coflows, ref)
+        )
+        validate_schedule(inst, schedules)
+
+
+# Both calendar executors are oracle-checked: the lockstep NumPy pair
+# engine ("wide", the CPU path) on the full seed grid, the vmapped
+# `lax.while_loop` ("jax", the accelerator path) on a compile-friendly
+# subset.
+FUZZ_CASES = [(s, "wide") for s in range(6)] + [(s, "jax") for s in range(2)]
+
+
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+@pytest.mark.parametrize("seed,engine", FUZZ_CASES)
+def test_fuzz_mixed_shapes_and_releases(discipline, seed, engine):
+    """Random mixed-shape ensembles: every member pads flows, ports and
+    cores differently; half the seeds use arbitrary release times."""
+    rng = np.random.default_rng(seed)
+    instances = [
+        random_instance(
+            num_coflows=int(rng.integers(2, 14)),
+            num_ports=int(rng.integers(2, 8)),
+            num_cores=int(rng.integers(1, 5)),
+            delta=float(rng.choice([0.0, 2.0, 8.0])),
+            density=float(rng.uniform(0.15, 0.8)),
+            release_span=float(rng.choice([0.0, 25.0])),
+            seed=1000 * seed + i,
+        )
+        for i in range(4)
+    ]
+    _batch_vs_loop(instances, discipline, engine)
+
+
+@pytest.mark.parametrize("engine", ["wide", "jax"])
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_single_flow_and_empty_cores(discipline, engine):
+    """F=1 instances on K=3 cores: two cores stay empty, and the empty
+    CoreSchedules must match the oracle's F=0 fast path field for field."""
+    demands = np.zeros((1, 3, 3))
+    demands[0, 1, 2] = 7.0
+    inst = dataclasses.replace(
+        random_instance(num_coflows=1, num_ports=3, num_cores=3, seed=0),
+        demands=demands,
+    )
+    order = np.array([0])
+    alloc = allocate(inst, order)
+    (schedules, ccts), = schedule_batch(
+        [inst], [alloc], [order], discipline=discipline, engine=engine
+    )
+    ref = _schedule_all_cores(inst, alloc, order, discipline=discipline)
+    _assert_schedules_identical(schedules, ref, "F=1")
+    assert sum(len(cs.coflow) for cs in schedules) == 1
+    assert np.array_equal(ccts, ccts_from_schedules(1, ref))
+
+
+def _raw_alloc(coflow, src, dst, size, core, K, N):
+    z = np.zeros((K, 2 * N))
+    return Allocation(
+        coflow=np.asarray(coflow, dtype=np.int64),
+        src=np.asarray(src, dtype=np.int64),
+        dst=np.asarray(dst, dtype=np.int64),
+        size=np.asarray(size, dtype=np.float64),
+        core=np.asarray(core, dtype=np.int64),
+        rho_ports=z,
+        tau_ports=z.copy(),
+        prefix_lb=np.zeros(int(np.max(coflow)) + 1),
+    )
+
+
+@pytest.mark.parametrize("engine", ["wide", "jax"])
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_zero_duration_flows(discipline, engine):
+    """size=0 + delta=0 subflows (dur == 0) chain same-port starts at one
+    instant in the NumPy loop; the padded calendar must do exactly the
+    same instead of stalling or spreading them across events."""
+    N, K = 4, 2
+    inst = dataclasses.replace(
+        random_instance(num_coflows=3, num_ports=N, num_cores=K, seed=1),
+        delta=0.0,
+    )
+    alloc = _raw_alloc(
+        coflow=[0, 0, 1, 2, 2],
+        src=[0, 0, 1, 0, 3],
+        dst=[1, 1, 2, 1, 3],
+        size=[0.0, 0.0, 5.0, 0.0, 2.0],
+        core=[0, 0, 0, 0, 1],
+        K=K, N=N,
+    )
+    order = np.arange(3)
+    (schedules, ccts), = schedule_batch(
+        [inst], [alloc], [order], discipline=discipline, engine=engine
+    )
+    ref = _schedule_all_cores(inst, alloc, order, discipline=discipline)
+    _assert_schedules_identical(schedules, ref, "dur=0")
+    assert (schedules[0].establish >= 0).all()
+    assert np.array_equal(ccts, ccts_from_schedules(3, ref))
+
+
+def test_empty_ensemble_and_mismatch():
+    assert schedule_batch([], [], []) == []
+    inst = random_instance(num_coflows=3, num_ports=3, num_cores=2, seed=0)
+    with pytest.raises(ValueError, match="length mismatch"):
+        schedule_batch([inst], [], [])
+    with pytest.raises(ValueError, match="unknown discipline"):
+        schedule_batch([], [], [], discipline="nope")
+    with pytest.raises(ValueError, match="unknown engine"):
+        schedule_batch([], [], [], engine="nope")
+
+
+def test_event_bound_is_static_and_generous():
+    # 3F + 4: F start rounds + 2F + 1 distinct event values, plus slack.
+    assert event_bound(0) == 4
+    assert event_bound(100) == 304
+
+
+# ------------------------------------------------- end-to-end parity grid
+GRID = [(5, 3, 2, 0), (8, 4, 3, 1), (6, 5, 4, 2)]
+
+
+@pytest.fixture(scope="module")
+def grid_with_lp():
+    instances = [
+        random_instance(
+            num_coflows=M, num_ports=N, num_cores=K, seed=seed,
+            release_span=15.0 * (seed % 2),
+        )
+        for M, N, K, seed in GRID
+    ]
+    # The EPS fluid scheme models packet switching: it requires delta == 0,
+    # so the grid carries a zero-delta shadow ensemble for it.
+    zero = [dataclasses.replace(i, delta=0.0) for i in instances]
+    return (
+        instances, [lp.solve_exact(i) for i in instances],
+        zero, [lp.solve_exact(i) for i in zero],
+    )
+
+
+@pytest.mark.parametrize("scheme", sorted(pipeline.list_schemes()))
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_run_batch_cct_parity_all_schemes(scheme, discipline, grid_with_lp):
+    """`run_batch` (batched alloc + batched circuit where available) must
+    reproduce the per-instance `Pipeline.run` CCTs bit for bit for every
+    registered scheme."""
+    instances, sols, zero, zero_sols = grid_with_lp
+    if pipeline.get_scheme(scheme).circuit == "fluid":
+        instances, sols = zero, zero_sols
+    pipe = pipeline.get_pipeline(scheme, discipline=discipline)
+    batch = pipe.run_batch(instances, lp_solutions=sols, require_batch=True)
+    for inst, sol, got in zip(instances, sols, batch):
+        ref = pipe.run(inst, lp_solution=sol)
+        assert np.array_equal(got.ccts, ref.ccts), scheme
+        assert got.total_weighted_cct == ref.total_weighted_cct, scheme
+
+
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_circuit_loop_backend_falls_back_and_matches(discipline, grid_with_lp):
+    """circuit_backend="loop" runs the per-instance oracle inside
+    run_batch (identical results), and require_batch flags the fallback."""
+    instances, sols, _, _ = grid_with_lp
+    pipe = pipeline.get_pipeline(
+        "ours", discipline=discipline, circuit_backend="loop"
+    )
+    batch = pipe.run_batch(instances, lp_solutions=sols)
+    ref = pipeline.get_pipeline("ours", discipline=discipline).run_batch(
+        instances, lp_solutions=sols, require_batch=True
+    )
+    for a, b in zip(batch, ref):
+        assert np.array_equal(a.ccts, b.ccts)
+        _assert_schedules_identical(
+            a.core_schedules, b.core_schedules, "loop-backend"
+        )
+    with pytest.raises(RuntimeError, match="circuit loop"):
+        pipe.run_batch(instances, lp_solutions=sols, require_batch=True)
+
+
+def test_unknown_circuit_backend_rejected():
+    with pytest.raises(ValueError, match="unknown circuit backend"):
+        pipeline.build_pipeline(
+            pipeline.get_scheme("ours"), circuit_backend="nope"
+        )
+
+
+def test_not_scheduled_guard_regression():
+    """cct_per_coflow must refuse schedules with NOT_SCHEDULED flows
+    rather than silently clamping them to 0 in the max."""
+    from repro.core.circuit import CoreSchedule
+
+    cs = CoreSchedule(
+        coflow=np.array([0, 1]),
+        src=np.array([0, 1]),
+        dst=np.array([1, 2]),
+        size=np.array([1.0, 2.0]),
+        establish=np.array([0.0, NOT_SCHEDULED]),
+        complete=np.array([1.5, NOT_SCHEDULED]),
+        rate=2.0,
+        delta=0.5,
+    )
+    with pytest.raises(ValueError, match="NOT_SCHEDULED"):
+        cs.cct_per_coflow(2)
+    cs.complete[1] = 3.0
+    cs.establish[1] = 0.5
+    out = cs.cct_per_coflow(2)
+    assert np.array_equal(out, [1.5, 3.0])

@@ -130,3 +130,51 @@ def test_cct_at_least_lower_bound():
     assert np.all(res.ccts >= lb1 - 1e-9)
     lb2 = inst.releases + inst.delta + inst.max_port_load() / inst.aggregate_rate
     assert np.all(res.ccts >= lb2 - 1e-9)
+
+
+def test_greedy_round_fixpoint_matches_scan():
+    """`resolve_event`'s multi-start greedy rounds, iterated to a fixpoint
+    at one instant, must start exactly the flows (with exactly the port
+    free times) of the literal one-at-a-time highest-priority-first
+    backfill scan — including zero-duration chains."""
+    from repro.core.circuit import resolve_event
+
+    rng = np.random.default_rng(0)
+    for trial in range(200):
+        F = int(rng.integers(1, 30))
+        N = int(rng.integers(1, 6))
+        src = rng.integers(0, N, F)
+        dst = rng.integers(0, N, F)
+        t = 3.0
+        free_in = np.where(rng.random(N) < 0.6, 0.0, 7.0)
+        free_out = np.where(rng.random(N) < 0.6, 0.0, 7.0)
+        waiting0 = rng.random(F) < 0.8
+        dur = np.where(rng.random(F) < 0.25, 0.0, rng.uniform(0.5, 4.0, F))
+
+        # Sequential reference: start the first idle flow, update, rescan.
+        fi_s, fo_s, w = free_in.copy(), free_out.copy(), waiting0.copy()
+        started_seq = np.zeros(F, dtype=bool)
+        while True:
+            idle = w & (fi_s[src] <= t) & (fo_s[dst] <= t)
+            if not idle.any():
+                break
+            f = int(np.argmax(idle))
+            fi_s[src[f]] = fo_s[dst[f]] = t + dur[f]
+            w[f] = False
+            started_seq[f] = True
+
+        # Multi-start rounds to a fixpoint.
+        fi_r, fo_r, w = free_in.copy(), free_out.copy(), waiting0.copy()
+        started_rnd = np.zeros(F, dtype=bool)
+        while True:
+            start = resolve_event(src, dst, fi_r, fo_r, w, t, "greedy")
+            if not start.any():
+                break
+            end = t + dur[start]
+            fi_r[src[start]] = end
+            fo_r[dst[start]] = end
+            w &= ~start
+            started_rnd |= start
+
+        assert np.array_equal(started_rnd, started_seq), trial
+        assert np.array_equal(fi_r, fi_s) and np.array_equal(fo_r, fo_s)

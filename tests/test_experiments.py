@@ -118,6 +118,45 @@ def test_sweep_batch_alloc_matches_loop():
         sweep(ens, alloc="vector")
 
 
+def test_sweep_batch_circuit_matches_loop():
+    """circuit="loop" (the per-instance event-loop oracle) and the default
+    batched calendar must agree bit for bit across every scheme."""
+    ens = _ens()
+    res_b = sweep(ens, lp_iters=200, circuit="batch")
+    res_l = sweep(ens, lp_iters=200, circuit="loop")
+    for rb, rl in zip(res_b.records, res_l.records):
+        for s in rb.results:
+            assert np.array_equal(rb.results[s].ccts, rl.results[s].ccts)
+    with pytest.raises(ValueError):
+        sweep(ens, circuit="vector")
+
+
+def test_sweep_certify_shares_stages_across_disciplines(monkeypatch):
+    """certify=True reruns OURS under the reserving discipline; with the
+    batched path that rerun must reuse the sweep's ordering pass and
+    batched allocation through the stage cache (one batched allocation
+    for the whole sweep), not recompute them per discipline."""
+    from repro.pipeline import batch_alloc
+
+    calls = {"n": 0}
+    real = batch_alloc.allocate_batch
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(batch_alloc, "allocate_batch", counting)
+    ens = [
+        random_instance(num_coflows=6, num_ports=3, seed=0),
+        random_instance(num_coflows=5, num_ports=3, seed=1),
+    ]
+    res = sweep(ens, schemes=("ours",), lp_method="exact", certify=True)
+    assert calls["n"] == 1
+    for rec in res.records:
+        assert rec.cert_greedy is not None
+        assert rec.cert_reserving is not None
+
+
 def test_sweep_rows_carry_tail_cct_columns(tmp_path, monkeypatch):
     """Every exported row carries absolute p95/p99 tails, JSON and CSV."""
     monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))

@@ -266,3 +266,77 @@ def test_quantize_flat_roundtrip():
     assert out.shape == (1000,)
     err = np.abs(np.asarray(out) - np.asarray(x))
     assert err.max() < 0.1  # |x| ~ 3 max -> scale ~ 0.03
+
+
+# ---------------------------------------------------------------- event_resolve
+def _random_event_state(seed, G, F, N):
+    rng = np.random.default_rng(seed)
+    return dict(
+        src=jnp.asarray(rng.integers(0, N, (G, F)), jnp.int32),
+        dst=jnp.asarray(rng.integers(0, N, (G, F)), jnp.int32),
+        rel=jnp.asarray(rng.uniform(0, 10, (G, F)), jnp.float32),
+        free_in=jnp.asarray(rng.uniform(0, 10, (G, N)), jnp.float32),
+        free_out=jnp.asarray(rng.uniform(0, 10, (G, N)), jnp.float32),
+        pending=jnp.asarray(rng.random((G, F)) < 0.7),
+        t=jnp.asarray(rng.uniform(0, 10, G), jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("G,F,N", [(1, 1, 1), (3, 17, 5), (8, 130, 9)])
+def test_event_resolve_kernel_matches_ref(G, F, N):
+    """Pallas idle/first-waiting reduction == jnp oracle across padding."""
+    from repro.kernels.event_resolve import event_resolve
+
+    s = _random_event_state(G * 1000 + F, G, F, N)
+    got = np.asarray(event_resolve(**s, use_kernel=True))
+    ref = np.asarray(event_resolve(**s, use_kernel=False))
+    assert got.dtype == ref.dtype == np.bool_
+    assert np.array_equal(got, ref)
+
+
+def test_event_resolve_matches_numpy_primitive():
+    """Both paths reproduce core.circuit.resolve_event member by member."""
+    from repro.core.circuit import resolve_event
+    from repro.kernels.event_resolve import event_resolve
+
+    s = _random_event_state(7, 4, 23, 6)
+    got = np.asarray(event_resolve(**s, use_kernel=True))
+    for g in range(4):
+        waiting = np.asarray(s["pending"][g]) & (
+            np.asarray(s["rel"][g]) <= float(s["t"][g])
+        )
+        ref = resolve_event(
+            np.asarray(s["src"][g], dtype=np.int64),
+            np.asarray(s["dst"][g], dtype=np.int64),
+            np.asarray(s["free_in"][g]),
+            np.asarray(s["free_out"][g]),
+            waiting,
+            float(s["t"][g]),
+        )
+        assert np.array_equal(got[g], ref), g
+
+
+def test_event_resolve_reserving_semantics():
+    """A waiting-but-blocked flow reserves its ports: the start mask must
+    exclude lower-priority flows sharing them even when idle."""
+    from repro.kernels.event_resolve import event_resolve
+
+    # All three flows idle at t=0.  flow0 (0->1) is first on both its
+    # ports and starts; flow1 (2->1) loses egress 1 to flow0's claim;
+    # flow2 (2->3) is idle but flow1 reserves ingress 2 ahead of it, so
+    # it must not start either (the reserving property).
+    src = jnp.asarray([[0, 2, 2]], jnp.int32)
+    dst = jnp.asarray([[1, 1, 3]], jnp.int32)
+    rel = jnp.zeros((1, 3), jnp.float32)
+    free_in = jnp.zeros((1, 4), jnp.float32)
+    free_out = jnp.zeros((1, 4), jnp.float32)
+    pending = jnp.ones((1, 3), bool)
+    t = jnp.zeros((1,), jnp.float32)
+    for use_kernel in (True, False):
+        got = np.asarray(
+            event_resolve(
+                src, dst, rel, free_in, free_out, pending, t,
+                use_kernel=use_kernel,
+            )
+        )
+        assert got.tolist() == [[True, False, False]]

@@ -178,7 +178,9 @@ def test_run_batch_stage_cache_shares_order_and_allocation(grid_with_lp):
         assert a.allocation is b.allocation
     for a, b in zip(by_scheme["ours"], by_scheme["load_only"]):
         assert a.allocation is not b.allocation
-    assert len(cache) == 3  # one order key (lp), two alloc keys (tau/no-tau)
+    # one order key (lp), two alloc keys (tau/no-tau), and one circuit
+    # key per distinct (kind, discipline, backend, alloc) combination.
+    assert len(cache) == 7
     for s, results in by_scheme.items():
         for inst, sol, got in zip(instances, sols, results):
             ref = scheduler._legacy_run(inst, s, lp_solution=sol)
