@@ -7,9 +7,13 @@ timed on its own (``circuit_batch_speedup_x``).
 
 ``python -m benchmarks.micro --batch-smoke`` runs only the pipeline case
 with ``require_batch=True`` (any fallback to the per-instance allocation
-or circuit loop is an error), prints cold/warm timings and writes them to
-``results/benchmarks/micro.json`` — the CI smoke step and its uploaded
-perf-trajectory artifact."""
+or circuit loop is an error), prints cold/warm timings and merges them
+into ``results/benchmarks/micro.json`` — the CI smoke step and its
+uploaded perf-trajectory artifact.  ``--sharded-smoke`` runs the
+data-axis-sharded sweep (``sweep(mesh=make_local_mesh())``) against the
+single-device run, asserts bit-identical rows, and merges
+``sharded_sweep_speedup_x`` into the same artifact (CI forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for it)."""
 
 from __future__ import annotations
 
@@ -215,6 +219,10 @@ def run(quick=False):
     stats.pop("B")
     rows.extend(stats.items())
 
+    # Sharded-ensemble sweep vs single device (data-axis NamedSharding;
+    # 1-device meshes still exercise the sharded code path).
+    rows.extend(bench_sharded_sweep(quick=quick).items())
+
     # Kernel oracles (interpret mode on CPU).
     from repro.kernels.lp_terms import lp_terms, lp_terms_batch
     from repro.kernels.port_stats import port_stats
@@ -268,7 +276,102 @@ def batch_smoke(quick=False):
     stats.pop("B")
     for name, val in stats.items():
         print(f"micro,{name},{val:.4f}")
-    save_json("micro", stats)
+    _merge_micro_json(stats)
+    return stats
+
+
+def _merge_micro_json(stats):
+    """Update ``results/benchmarks/micro.json`` in place: consecutive
+    smoke runs against one results dir accumulate rows instead of
+    clobbering each other."""
+    import json
+    import os
+
+    from benchmarks.common import results_dir
+
+    path = os.path.join(results_dir(), "micro.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(stats)
+    save_json("micro", merged)
+
+
+def bench_sharded_sweep(quick=False, ensemble_size=32, lp_iters=200):
+    """Sharded multi-device sweep vs the single-device run.
+
+    Runs the same mixed-shape ensemble through `sweep` twice — unsharded,
+    then with the ensemble axis sharded over `make_local_mesh()`'s
+    ``data`` axis — asserts the exported rows are identical, and times
+    the warm second pass of each path (both paths pay their own compile
+    on the first pass; warm wall time is what a repeated figure sweep
+    sees).  Under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    this is the 8-way SPMD path on one host; on real multi-device
+    backends the same code shards across accelerators.
+    """
+    import json
+
+    import jax
+
+    from repro.experiments import sweep
+    from repro.launch.mesh import data_axis_size, make_local_mesh
+
+    B = 8 if quick else ensemble_size
+    iters = 100 if quick else lp_iters
+    rng = np.random.default_rng(2)
+    ens = [
+        random_instance(
+            num_coflows=int(rng.integers(20, 52)),
+            num_ports=int(rng.integers(4, 12)),
+            num_cores=int(rng.integers(2, 5)),
+            seed=200 + s,
+        )
+        for s in range(B)
+    ]
+    mesh = make_local_mesh()
+    kwargs = dict(
+        schemes=("ours",), lp_iters=iters,
+        m_quantum=None, p_quantum=None, validate=False,
+    )
+
+    def timed_pair(**kw):
+        sweep(ens, **kwargs, **kw)  # compile/warmup pass
+        t0 = time.perf_counter()
+        res = sweep(ens, **kwargs, **kw)
+        return res, time.perf_counter() - t0
+
+    res_single, t_single = timed_pair()
+    res_sharded, t_sharded = timed_pair(mesh=mesh)
+    if json.dumps(res_single.rows(), default=float) != json.dumps(
+        res_sharded.rows(), default=float
+    ):
+        raise AssertionError(
+            "sharded sweep rows diverged from the single-device run"
+        )
+    return {
+        "sharded_devices": len(jax.devices()),
+        "sharded_data_axis": data_axis_size(mesh),
+        f"sweep_single_ensemble{B}_s": t_single,
+        f"sweep_sharded_ensemble{B}_s": t_sharded,
+        "sharded_sweep_speedup_x": t_single / t_sharded,
+    }
+
+
+def sharded_smoke(quick=False):
+    """CI smoke for the sharded sweep path (forced multi-device host).
+
+    Asserts bit-identical rows between the sharded and single-device
+    sweeps and records ``sharded_sweep_speedup_x`` (plus raw timings and
+    the device count) into ``results/benchmarks/micro.json``, merging
+    with whatever that file already holds (local runs of both smokes
+    accumulate one file; the CI jobs run on separate runners and upload
+    separately-named artifacts).
+    """
+    stats = bench_sharded_sweep(quick=quick)
+    for name, val in stats.items():
+        print(f"micro,{name},{val:.4f}")
+    _merge_micro_json(stats)
     return stats
 
 
@@ -289,8 +392,17 @@ if __name__ == "__main__":
         help="run only the batched-allocation pipeline case; error on any "
         "fallback to the per-instance loop",
     )
+    ap.add_argument(
+        "--sharded-smoke",
+        action="store_true",
+        help="run only the sharded-sweep case (sweep(mesh=...) vs the "
+        "single-device run; bit-identical rows asserted, "
+        "sharded_sweep_speedup_x merged into micro.json)",
+    )
     args = ap.parse_args()
     if args.batch_smoke:
         batch_smoke(quick=args.quick)
+    elif args.sharded_smoke:
+        sharded_smoke(quick=args.quick)
     else:
         main(quick=args.quick)

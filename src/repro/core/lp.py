@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Any, Sequence
 
 import numpy as np
 import scipy.sparse as sp
@@ -49,9 +49,12 @@ from repro.core.coflow import CoflowInstance, port_stats
 
 __all__ = [
     "LPSolution",
+    "LPSolutionBatch",
     "solve_exact",
     "solve_subgradient",
     "solve_subgradient_batch",
+    "solve_subgradient_batch_arrays",
+    "pack_lp_arrays",
     "lp_objective",
 ]
 
@@ -478,51 +481,110 @@ def _subgradient_run_batch(
     return best_Y, T_best, best_F, hist
 
 
-def solve_subgradient_batch(
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LPSolutionBatch:
+    """Padded ensemble solution of the ordering LP — the array-form result.
+
+    One row per bucket member, padded to the bucket shape; padded coflow
+    slots carry completion 0 and contribute nothing.  The arrays may be
+    **device-resident** (and sharded across the ensemble axis) exactly as
+    the batched solver produced them; `repro.experiments.results.
+    device_gather` is the aggregation step that brings a batch to host
+    numpy.  `order_batch` turns the padded completions into every
+    member's global order in one masked stable argsort (the same sort
+    `LPOrder.order_batch` applies when `Pipeline.run_batch` re-pads
+    per-instance solutions); per-instance `LPSolution`s are materialized
+    only on demand via `unpack`.
+    """
+
+    completion: Any  # (B, Mp) T~_m, 0 on padded slots
+    y: Any  # (B, Mp, Mp) strict-upper-tri precedence values
+    objective: Any  # (B,) sum_m w_m T~_m
+    method: str = dataclasses.field(metadata=dict(static=True))
+    iterations: int = dataclasses.field(
+        default=0, metadata=dict(static=True)
+    )
+
+    @property
+    def num_members(self) -> int:
+        return int(self.completion.shape[0])
+
+    def order_batch(self, coflow_mask: np.ndarray) -> np.ndarray:
+        """(B, Mp) padded orders: non-decreasing T~_m per member, padded
+        slots pushed stably to the tail (Algorithm 1 Line 2, whole bucket).
+
+        Row ``b`` restricted to its first M_b entries is bit-identical to
+        ``LPSolution.order()`` of that member alone: masking padded slots
+        to +inf before a stable argsort leaves the relative order of the
+        real entries untouched.
+        """
+        comp = np.asarray(self.completion, dtype=np.float64)
+        key = np.where(np.asarray(coflow_mask), comp, np.inf)
+        return np.argsort(key, axis=1, kind="stable")
+
+    def unpack(self, num_coflows: Sequence[int]) -> list[LPSolution]:
+        """Materialize per-instance `LPSolution`s (host side, on demand).
+
+        Gathers device (possibly sharded) arrays to host numpy first; the
+        f64 conversion matches the legacy list-of-`LPSolution` path."""
+        comp = np.asarray(self.completion, dtype=np.float64)
+        y = np.asarray(self.y, dtype=np.float64)
+        obj = np.asarray(self.objective, dtype=np.float64)
+        out = []
+        for b, M in enumerate(num_coflows):
+            out.append(
+                LPSolution(
+                    completion=comp[b, :M],
+                    precedence=_precedence_from_Y(y[b, :M, :M]),
+                    objective=float(obj[b]),
+                    method=self.method,
+                    iterations=self.iterations,
+                )
+            )
+        return out
+
+
+def pack_lp_arrays(
     instances: Sequence[CoflowInstance],
-    iters: int = 3000,
-    warm_start_orders: Sequence[np.ndarray | None] | None = None,
     pad_coflows: int | None = None,
     pad_ports: int | None = None,
-) -> list[LPSolution]:
-    """Solve the ordering LP for a whole ensemble in one vectorized program.
+    warm_start_orders: Sequence[np.ndarray | None] | None = None,
+    pad_members: int | None = None,
+) -> dict[str, np.ndarray]:
+    """Pad an ensemble into the batched LP solver's input arrays.
 
-    Instances are zero-padded to a shared bucket shape (``pad_coflows``
-    coflows x ``pad_ports`` flat ports, defaulting to the ensemble maxima)
-    and the projected-subgradient iteration runs batched over the leading
-    ensemble axis — the per-step (B, Mp, Mp) @ (B, Mp, Pp) contractions are
-    exactly the `lp_terms_batch` kernel's shape.  Padded coflows and ports
-    are masked out of the max terms and carry zero weight, so each member's
-    trajectory matches what `solve_subgradient` computes for it alone (up
-    to f32 reduction-order noise).
-
-    Returns one `LPSolution` per instance, in input order.
+    This is the **single** host-side padding step of the LP phase: the
+    returned dict feeds `solve_subgradient_batch_arrays` as-is (and is what
+    `repro.pipeline.ensemble_batch.EnsembleBatch` embeds, so LP, ordering,
+    allocation and circuit all read one padded representation).
+    ``pad_members`` rounds the member axis up (for sharding to a device
+    count); padded members are all-masked zero rows — exact no-ops.
     """
     instances = list(instances)
-    if not instances:
-        return []
     B = len(instances)
     if warm_start_orders is None:
         warm_start_orders = [None] * B
     Ms = [inst.num_coflows for inst in instances]
     Ps = [2 * inst.num_ports for inst in instances]
-    Mp = pad_coflows if pad_coflows is not None else max(Ms)
-    Pp = pad_ports if pad_ports is not None else max(Ps)
-    if Mp < max(Ms) or Pp < max(Ps):
+    Mp = pad_coflows if pad_coflows is not None else max(Ms, default=0)
+    Pp = pad_ports if pad_ports is not None else max(Ps, default=0)
+    if B and (Mp < max(Ms) or Pp < max(Ps)):
         raise ValueError(
             f"bucket shape ({Mp}, {Pp}) too small for ensemble maxima "
             f"({max(Ms)}, {max(Ps)})"
         )
+    Bp = B if pad_members is None else max(pad_members, B)
 
-    Y0 = np.zeros((B, Mp, Mp), dtype=np.float32)
-    p_rho = np.zeros((B, Mp, Pp), dtype=np.float32)
-    p_tau = np.zeros((B, Mp, Pp), dtype=np.float32)
-    weights = np.zeros((B, Mp), dtype=np.float32)
-    releases = np.zeros((B, Mp), dtype=np.float32)
-    inv_R = np.zeros(B, dtype=np.float32)
-    delta_over_K = np.zeros(B, dtype=np.float32)
-    coflow_mask = np.zeros((B, Mp), dtype=bool)
-    port_mask = np.zeros((B, Pp), dtype=bool)
+    Y0 = np.zeros((Bp, Mp, Mp), dtype=np.float32)
+    p_rho = np.zeros((Bp, Mp, Pp), dtype=np.float32)
+    p_tau = np.zeros((Bp, Mp, Pp), dtype=np.float32)
+    weights = np.zeros((Bp, Mp), dtype=np.float32)
+    releases = np.zeros((Bp, Mp), dtype=np.float32)
+    inv_R = np.zeros(Bp, dtype=np.float32)
+    delta_over_K = np.zeros(Bp, dtype=np.float32)
+    coflow_mask = np.zeros((Bp, Mp), dtype=bool)
+    port_mask = np.zeros((Bp, Pp), dtype=bool)
     for b, inst in enumerate(instances):
         M, P = Ms[b], Ps[b]
         rho, tau = port_stats(inst.demands)
@@ -535,33 +597,92 @@ def solve_subgradient_batch(
         coflow_mask[b, :M] = True
         port_mask[b, :P] = True
         Y0[b, :M, :M] = _warm_start_Y0(inst, warm_start_orders[b])
-
-    best_Y, T_best, best_F, _ = _subgradient_run_batch(
-        jnp.asarray(Y0),
-        jnp.asarray(p_rho),
-        jnp.asarray(p_tau),
-        jnp.asarray(weights),
-        jnp.asarray(releases),
-        jnp.asarray(inv_R),
-        jnp.asarray(delta_over_K),
-        jnp.asarray(coflow_mask),
-        jnp.asarray(port_mask),
-        iters=iters,
+    return dict(
+        Y0=Y0, p_rho=p_rho, p_tau=p_tau, weights=weights, releases=releases,
+        inv_R=inv_R, delta_over_K=delta_over_K, coflow_mask=coflow_mask,
+        port_mask=port_mask,
     )
-    best_Y = np.asarray(best_Y, dtype=np.float64)
-    T_best = np.asarray(T_best, dtype=np.float64)
-    best_F = np.asarray(best_F, dtype=np.float64)
 
-    out = []
-    for b, inst in enumerate(instances):
-        M = Ms[b]
-        out.append(
-            LPSolution(
-                completion=T_best[b, :M],
-                precedence=_precedence_from_Y(best_Y[b, :M, :M]),
-                objective=float(best_F[b]),
-                method="subgradient_batch",
-                iterations=iters,
-            )
+
+def solve_subgradient_batch_arrays(
+    arrays,
+    iters: int = 3000,
+    sharding=None,
+) -> LPSolutionBatch:
+    """Array-in/array-out ensemble LP solve.
+
+    ``arrays`` is the `pack_lp_arrays` dict (what
+    `EnsembleBatch.lp_arrays()` returns).  ``sharding`` places every
+    input with a `jax.sharding.Sharding` (typically a data-axis
+    `NamedSharding`) before the jitted solve, so the subgradient iteration
+    runs SPMD across the ensemble axis; members are independent
+    (vmap-parallel), so sharded and unsharded runs are bit-identical per
+    member.  Returns the padded `LPSolutionBatch` — nothing is unpadded
+    here.
+    """
+    names = (
+        "Y0", "p_rho", "p_tau", "weights", "releases", "inv_R",
+        "delta_over_K", "coflow_mask", "port_mask",
+    )
+    ins = [arrays[k] for k in names]
+    B, Mp = ins[0].shape[:2]
+    if B == 0 or Mp == 0:
+        # Degenerate bucket (empty ensemble, or every member has M=0):
+        # nothing to iterate on — the solution is identically zero.
+        return LPSolutionBatch(
+            completion=np.zeros((B, Mp)),
+            y=np.zeros((B, Mp, Mp)),
+            objective=np.zeros(B),
+            method="subgradient_batch",
+            iterations=iters,
         )
-    return out
+    from repro.launch.mesh import place
+
+    ins = [place(x, sharding) for x in ins]
+    best_Y, T_best, best_F, _ = _subgradient_run_batch(*ins, iters=iters)
+    # Device-resident (and, under ``sharding``, device-sharded) result;
+    # `unpack` / `experiments.results.device_gather` bring it to host.
+    return LPSolutionBatch(
+        completion=T_best,
+        y=best_Y,
+        objective=best_F,
+        method="subgradient_batch",
+        iterations=iters,
+    )
+
+
+def solve_subgradient_batch(
+    instances: Sequence[CoflowInstance],
+    iters: int = 3000,
+    warm_start_orders: Sequence[np.ndarray | None] | None = None,
+    pad_coflows: int | None = None,
+    pad_ports: int | None = None,
+    sharding=None,
+) -> list[LPSolution]:
+    """Solve the ordering LP for a whole ensemble in one vectorized program.
+
+    Instances are zero-padded to a shared bucket shape (``pad_coflows``
+    coflows x ``pad_ports`` flat ports, defaulting to the ensemble maxima)
+    and the projected-subgradient iteration runs batched over the leading
+    ensemble axis — the per-step (B, Mp, Mp) @ (B, Mp, Pp) contractions are
+    exactly the `lp_terms_batch` kernel's shape.  Padded coflows and ports
+    are masked out of the max terms and carry zero weight, so each member's
+    trajectory matches what `solve_subgradient` computes for it alone (up
+    to f32 reduction-order noise).
+
+    This is the list-in/list-out convenience wrapper over the array
+    pipeline (`pack_lp_arrays` -> `solve_subgradient_batch_arrays` ->
+    `LPSolutionBatch.unpack`); batch-first callers keep the padded
+    `LPSolutionBatch` instead.  Returns one `LPSolution` per instance, in
+    input order.
+    """
+    instances = list(instances)
+    if not instances:
+        return []
+    arrays = pack_lp_arrays(
+        instances, pad_coflows, pad_ports, warm_start_orders
+    )
+    batch = solve_subgradient_batch_arrays(
+        arrays, iters=iters, sharding=sharding
+    )
+    return batch.unpack([inst.num_coflows for inst in instances])

@@ -5,8 +5,13 @@ instances, so the ensemble — not the single instance — is the natural unit
 of compute.  Solving the ordering LP one instance at a time starves the
 batched `lp_terms` contraction at the small M of a single instance; this
 module groups instances into shape buckets (M and 2N rounded up to a
-quantum) and solves each bucket with `lp.solve_subgradient_batch`, turning
-a sweep's LP phase into a handful of vectorized programs.
+quantum) and solves each bucket with the array-form ensemble solver
+(`lp.pack_lp_arrays` → `lp.solve_subgradient_batch_arrays`), turning a
+sweep's LP phase into a handful of vectorized programs.  With ``mesh=``
+each bucket's member axis is padded to the mesh's ``data``-axis size and
+the solve runs SPMD across devices (`repro.launch.mesh.data_sharding`);
+members are independent, so sharded and unsharded solves are
+bit-identical per member.
 
 Bucketing trades compile-cache hits against padding: a larger quantum means
 fewer distinct batched-program shapes but more padded (masked) work.  With
@@ -24,7 +29,19 @@ from typing import Sequence
 from repro.core import lp
 from repro.core.coflow import CoflowInstance
 
-__all__ = ["Bucket", "bucket_shape", "build_buckets", "solve_ensemble_lp"]
+__all__ = [
+    "COLLAPSED",
+    "Bucket",
+    "bucket_shape",
+    "build_buckets",
+    "solve_ensemble_lp",
+]
+
+#: `bucket_shape` sentinel for an axis collapsed to the ensemble maximum
+#: (quantum ``None``).  Distinct from 0 on purpose: a genuinely empty axis
+#: (an M=0 instance) rounds to 0 under any quantum, and must keep its own
+#: zero-shaped bucket instead of silently inheriting the ensemble maximum.
+COLLAPSED = -1
 
 
 def _round_up(n: int, quantum: int) -> int:
@@ -38,13 +55,15 @@ def bucket_shape(
 ) -> tuple[int, int]:
     """Padded (coflows, flat ports) bucket an instance falls into.
 
-    A quantum of ``None`` collapses that axis: every instance lands in the
-    same bucket, padded to the ensemble maximum (resolved in
-    `build_buckets`).
+    A quantum of ``None`` collapses that axis to the `COLLAPSED` sentinel:
+    every instance lands in the same bucket, padded to the ensemble
+    maximum (resolved in `build_buckets`).
     """
     return (
-        0 if m_quantum is None else _round_up(instance.num_coflows, m_quantum),
-        0
+        COLLAPSED
+        if m_quantum is None
+        else _round_up(instance.num_coflows, m_quantum),
+        COLLAPSED
         if p_quantum is None
         else _round_up(2 * instance.num_ports, p_quantum),
     )
@@ -72,6 +91,8 @@ def build_buckets(
     ``None`` quanta collapse the corresponding axis to the ensemble
     maximum — ``m_quantum=p_quantum=None`` yields a single bucket (one
     compile, maximal padding), the cheapest mode for cold one-shot sweeps.
+    Degenerate axes keep their true (zero) padding: an M=0 instance under
+    a numeric quantum stays in a zero-coflow bucket.
     """
     groups: dict[tuple[int, int], list[int]] = {}
     for i, inst in enumerate(instances):
@@ -80,8 +101,8 @@ def build_buckets(
     max_p = max((2 * inst.num_ports for inst in instances), default=0)
     return [
         Bucket(
-            num_coflows=m or max_m,
-            num_flat_ports=p or max_p,
+            num_coflows=max_m if m == COLLAPSED else m,
+            num_flat_ports=max_p if p == COLLAPSED else p,
             indices=tuple(idx),
         )
         for (m, p), idx in sorted(groups.items())
@@ -93,18 +114,42 @@ def solve_ensemble_lp(
     iters: int = 3000,
     m_quantum: int | None = 8,
     p_quantum: int | None = 8,
+    mesh=None,
 ) -> list[lp.LPSolution]:
     """Ordering-LP solutions for a whole ensemble, one batched solve per
-    shape bucket.  Returns solutions in input order."""
+    shape bucket.  Returns solutions in input order.
+
+    With ``mesh`` the padded member axis of every bucket is sharded over
+    the mesh's ``data`` axis (`NamedSharding`); bucket sizes that do not
+    divide the device count round up with fully-masked members.
+    """
     instances = list(instances)
     solutions: list[lp.LPSolution | None] = [None] * len(instances)
+    sharding = None
+    n_shards = 1
+    if mesh is not None:
+        from repro.launch.mesh import data_axis_size, data_sharding
+
+        sharding = data_sharding(mesh)
+        n_shards = data_axis_size(mesh)
     for bucket in build_buckets(instances, m_quantum, p_quantum):
-        batch = lp.solve_subgradient_batch(
-            [instances[i] for i in bucket.indices],
-            iters=iters,
+        members = [instances[i] for i in bucket.indices]
+        arrays = lp.pack_lp_arrays(
+            members,
             pad_coflows=bucket.num_coflows,
             pad_ports=bucket.num_flat_ports,
+            pad_members=_round_up(len(members), n_shards),
         )
-        for i, sol in zip(bucket.indices, batch):
+        batch = lp.solve_subgradient_batch_arrays(
+            arrays, iters=iters, sharding=sharding
+        )
+        if sharding is not None:
+            # Cross-device aggregation: assemble the sharded batch on
+            # host before unpadding to solutions.
+            from repro.experiments.results import device_gather
+
+            batch = device_gather(batch)
+        sols = batch.unpack([inst.num_coflows for inst in members])
+        for i, sol in zip(bucket.indices, sols):
             solutions[i] = sol
     return solutions  # type: ignore[return-value]

@@ -21,7 +21,25 @@ __all__ = [
     "save_json",
     "group_mean",
     "tail_columns",
+    "device_gather",
 ]
+
+
+def device_gather(tree):
+    """Gather every device array of a pytree to host numpy.
+
+    The cross-device aggregation step of sharded sweeps: a batch produced
+    under a `NamedSharding` (e.g. an `LPSolutionBatch` whose ensemble axis
+    is split over the mesh's ``data`` axis) has one shard per device;
+    assembling the addressable shards into ordinary numpy arrays is what
+    lets the driver unpad and export per-instance rows.  Non-array leaves
+    pass through untouched; host trees are a no-op.
+    """
+    import jax
+
+    return jax.tree.map(
+        lambda x: np.asarray(x) if isinstance(x, jax.Array) else x, tree
+    )
 
 
 def results_dir() -> str:

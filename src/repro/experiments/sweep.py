@@ -2,13 +2,15 @@
 
 `sweep` is the engine behind the figure reproductions: it takes a whole
 ensemble of instances, solves the ordering LP for all of them at once
-(`ensemble.solve_ensemble_lp`, shape-bucketed `solve_subgradient_batch`),
-then executes every requested scheme through the stage-based
-`repro.pipeline` API.  With ``alloc="batch"`` (the default) each scheme's
-`Pipeline.run_batch` consumes the shared LP solutions directly and runs
-the inter-core allocation stage vectorized across the ensemble axis
-(`repro.pipeline.batch_alloc`); ``alloc="loop"`` keeps the per-instance
-NumPy reference path (the oracle the batched path is bit-checked against).
+(`ensemble.solve_ensemble_lp`, shape-bucketed array solves), then
+executes every requested scheme through the stage-based `repro.pipeline`
+API.  With ``alloc="batch"`` (the default) each scheme's
+`Pipeline.run_batch` packs the ensemble once into the unified
+`EnsembleBatch` pytree (shared across schemes via the stage cache) and
+runs ordering, allocation and circuit scheduling as one array pipeline;
+``alloc="loop"`` keeps the per-instance NumPy reference path (the oracle
+the batched path is bit-checked against).  ``mesh=`` shards the batched
+stages' ensemble axis across the mesh's ``data`` axis, bit-identically.
 
 ``lp_method``:
   * ``"batch"``       — batched subgradient (default; fast, ~1% of optimum).
@@ -128,6 +130,7 @@ def sweep(
     certify: bool = False,
     metas: Sequence[Mapping[str, Any]] | None = None,
     validate: bool = True,
+    mesh=None,
 ) -> SweepResult:
     """Run an ensemble end to end with one shared LP phase.
 
@@ -142,6 +145,17 @@ def sweep(
     calendar) or ``"loop"`` (the per-instance oracle inside `run_batch`);
     with ``alloc="loop"`` the whole pipeline is already per-instance, so
     ``circuit`` has no effect there.
+
+    ``mesh`` shards the ensemble axis of every batched stage over the
+    mesh's ``data`` axis (`jax.sharding.NamedSharding` via
+    `repro.launch.mesh.data_sharding`): the bucketed LP solves, the
+    allocation scan and the JAX circuit calendar all run SPMD, with
+    member counts padded up to the device count (fully-masked no-op
+    members) and results gathered back on host
+    (`repro.experiments.results.device_gather`).  Members are
+    independent, so a sharded sweep's rows are bit-identical to the
+    single-device run; the per-instance ``alloc="loop"`` reference path
+    ignores it.
     With ``certify=True`` the OURS run is certified against the paper's
     Lemma 2-4 / Theorem 1 chain (greedy discipline for the practical
     ratio, reserving for the per-coflow guarantee) — this forces an exact
@@ -167,7 +181,8 @@ def sweep(
     t0 = time.perf_counter()
     if lp_method == "batch":
         sols = solve_ensemble_lp(
-            instances, iters=lp_iters, m_quantum=m_quantum, p_quantum=p_quantum
+            instances, iters=lp_iters, m_quantum=m_quantum,
+            p_quantum=p_quantum, mesh=mesh,
         )
     elif lp_method == "exact":
         sols = [lp.solve_exact(inst) for inst in instances]
@@ -196,6 +211,7 @@ def sweep(
                 lp_solutions=sols,
                 validate=validate,
                 stage_cache=stage_cache,
+                mesh=mesh,
             )
             for s, pipe in pipes.items()
         }
@@ -219,7 +235,7 @@ def sweep(
             if alloc == "batch":
                 return pipe.run_batch(
                     instances, lp_solutions=sols, validate=validate,
-                    stage_cache=stage_cache,
+                    stage_cache=stage_cache, mesh=mesh,
                 )
             return [
                 pipe.run(inst, lp_solution=sol, validate=validate)

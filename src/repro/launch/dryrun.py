@@ -127,6 +127,8 @@ def run_cell(
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     # XLA's cost_analysis counts while-loop bodies once; the HLO analyzer
     # multiplies by known trip counts (launch/hlo_cost.py).

@@ -13,7 +13,14 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "mesh_axis_sizes"]
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "mesh_axis_sizes",
+    "data_axis_size",
+    "data_sharding",
+    "place",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -34,10 +41,44 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh():
-    """1-device mesh with the production axis names (CPU tests)."""
+    """All-local-devices data mesh with the production axis names.
+
+    One device per ``data`` shard (CPU tests see 1 unless
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` forces more).
+    """
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def data_axis_size(mesh) -> int:
+    """Number of shards along the ensemble (``data``) axis."""
+    return int(mesh_axis_sizes(mesh).get("data", 1))
+
+
+def data_sharding(mesh):
+    """`NamedSharding` that splits an array's leading axis over ``data``.
+
+    The ensemble member axis of every batched scheduling stage
+    (`repro.pipeline.ensemble_batch`) is placed with this; trailing axes
+    stay replicated.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return NamedSharding(mesh, PartitionSpec("data"))
+
+
+def place(x, sharding=None):
+    """Stage-input placement: to device, under ``sharding`` when given.
+
+    The one definition of how batched-stage inputs reach devices (LP
+    solve, allocation scan, circuit calendar all route through this), so
+    placement policy changes happen in one spot.
+    """
+    import jax.numpy as jnp
+
+    x = jnp.asarray(x)
+    return x if sharding is None else jax.device_put(x, sharding)

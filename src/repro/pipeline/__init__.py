@@ -9,8 +9,13 @@ that the first-class structure:
     `CircuitStage` protocols and their concrete implementations;
   * `repro.pipeline.pipeline` — the `Pipeline` object with per-instance
     `run` and ensemble `run_batch` execution paths;
-  * `repro.pipeline.batch_alloc` — the vectorized (JAX scan) allocation
-    that `run_batch` uses across the ensemble axis.
+  * `repro.pipeline.ensemble_batch` — the unified padded `EnsembleBatch`
+    pytree built **once** per ensemble (LP arrays + canonical flow table
+    + core arrays, optionally sharded over a mesh's ``data`` axis) that
+    every batched stage consumes, and the `AllocationBatch` it produces;
+  * `repro.pipeline.batch_alloc` / `repro.pipeline.batch_circuit` — the
+    vectorized (JAX) allocation scan and circuit event calendar that
+    `run_batch` runs across the ensemble axis.
 
 Typical use::
 
@@ -24,6 +29,11 @@ Typical use::
 """
 
 from repro.core.scheduler import ScheduleResult, tail_cct, total_weighted_cct
+from repro.pipeline.ensemble_batch import (
+    AllocationBatch,
+    EnsembleBatch,
+    build_ensemble_batch,
+)
 from repro.pipeline.pipeline import Pipeline, build_pipeline, get_pipeline
 from repro.pipeline.spec import (
     PAPER_SCHEMES,
@@ -50,6 +60,9 @@ __all__ = [
     "Pipeline",
     "build_pipeline",
     "get_pipeline",
+    "EnsembleBatch",
+    "AllocationBatch",
+    "build_ensemble_batch",
     "SchemeSpec",
     "PAPER_SCHEMES",
     "register_scheme",

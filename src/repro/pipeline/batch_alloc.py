@@ -8,25 +8,35 @@ steps per flow.  After PR 2 batched the LP phase, this loop became the
 sweep bottleneck: B instances x thousands of flows, each flow a Python
 iteration.
 
-Here the identical recurrence advances a whole ensemble at once: flow
-sequences are padded to a shared length and one `jax.lax.scan` over the
-flow axis carries every instance's (rho, tau, lb) state, with the per-flow
-core selection vmapped across the ensemble axis.  The padding mirrors the
-masking scheme of `lp_terms_batch` / `solve_subgradient_batch`:
+Here the identical recurrence advances a whole ensemble at once:
+`allocate_batch_arrays` consumes the unified padded pytree
+(`repro.pipeline.ensemble_batch.EnsembleBatch`) plus a padded (Bp, Mp)
+order array, realizes the ordered flow sequence as one stable gather of
+the batch's canonical flow table (no re-extraction from instances), and
+advances every instance's (rho, tau, lb) state with one `jax.lax.scan`
+over the flow axis, the per-flow core selection vmapped across the
+ensemble axis.  When the batch carries a `NamedSharding` (built with
+``mesh=...``), the scan's inputs are placed with it and the program runs
+SPMD across the member axis.  The padding mirrors the masking scheme of
+`lp_terms_batch` / `solve_subgradient_batch`:
 
   * padded flow steps carry ``valid=False`` and update nothing (masked
     adds of 0.0 keep the carried f64 state bit-identical);
-  * padded cores start at a large finite lower bound (`_PAD_LB`) and get a
+  * padded cores start at a large finite lower bound (`PAD_LB`) and get a
     large inverse rate, so the argmin never selects them (finite, not inf,
     to keep ``0 * inf`` NaNs out of the candidate terms);
   * padded ports are simply never indexed (flow endpoints stay within each
-    instance's real 2N ports).
+    instance's real 2N ports);
+  * padded members (sharding round-up) have no valid flows and no real
+    cores — pure no-ops.
 
 The scan runs in float64 (locally enabled x64) and performs the same
 floating-point operations in the same order as the NumPy oracle, so core
 choices, prefix port stats and prefix lower bounds are **bit-identical**
 to `allocate` — asserted per scheme and per flow table by
-`tests/test_pipeline.py`.
+`tests/test_pipeline.py`.  `allocate_batch` is the list-in/list-out
+wrapper (build one `EnsembleBatch`, run the array form, materialize
+`Allocation`s) kept for oracle tests and loop-path callers.
 """
 
 from __future__ import annotations
@@ -41,12 +51,17 @@ from jax.experimental import enable_x64
 
 from repro.core.allocation import Allocation
 from repro.core.coflow import CoflowInstance, flows_of
+from repro.pipeline.ensemble_batch import (
+    PAD_LB,
+    AllocationBatch,
+    EnsembleBatch,
+    build_ensemble_batch,
+)
 
-__all__ = ["allocate_batch", "flow_sequence"]
+__all__ = ["allocate_batch", "allocate_batch_arrays", "flow_sequence"]
 
-# Padded-core sentinel: dominates every real candidate bound but stays
-# finite so padded-step arithmetic never produces inf * 0 = NaN.
-_PAD_LB = 1e30
+# Historical alias (the sentinel now lives with the pytree builder).
+_PAD_LB = PAD_LB
 
 
 def flow_sequence(
@@ -57,8 +72,8 @@ def flow_sequence(
     Returns (coflow, src, dst, size, ends) where the first four are the
     (F,) parallel arrays `allocate` would emit (coflows along `order`,
     flows largest-first within a coflow) and ``ends[pos]`` is the running
-    flow count after the coflow at order position ``pos`` — the index map
-    used to read per-coflow prefix lower bounds out of the scan.
+    flow count after the coflow at order position ``pos`` — the reference
+    the batched gather (`EnsembleBatch.permute_flows`) is checked against.
     """
     ms, is_, js, ds = [], [], [], []
     ends = np.zeros(instance.num_coflows, dtype=np.int64)
@@ -130,6 +145,74 @@ def _scan_all(pi, pj, d, valid, inv_rates, delta, one, lb0, core_mask, rho0, tau
     )
 
 
+def allocate_batch_arrays(
+    ensemble: EnsembleBatch,
+    orders: np.ndarray,
+    include_tau: bool = True,
+) -> AllocationBatch:
+    """Greedy allocation of a whole `EnsembleBatch` along padded orders.
+
+    ``orders`` is the (Bp, Mp) array an ordering stage's ``order_batch``
+    produces (or `EnsembleBatch.pad_orders` of per-instance permutations).
+    Returns the padded `AllocationBatch`; materialize per-instance
+    `Allocation`s only at the end of the pipeline.  Bit-identical to
+    ``[allocate(inst, order, include_tau) for ...]`` (see module
+    docstring).
+    """
+    Bp, Fp = ensemble.flow_size.shape
+    perm = ensemble.permute_flows(orders)
+    take = lambda a: np.take_along_axis(a, perm, axis=1)  # noqa: E731
+    coflow = take(ensemble.flow_coflow)
+    src = take(ensemble.flow_src)
+    dst = take(ensemble.flow_dst)
+    size = take(ensemble.flow_size)
+    pi = take(ensemble.flow_pi)
+    pj = take(ensemble.flow_pj)
+    valid = take(ensemble.flow_valid)
+    ends = ensemble.prefix_ends(orders)
+
+    Kp, Pp = ensemble.pad_cores, ensemble.pad_flat_ports
+    delta = ensemble.delta if include_tau else np.zeros_like(ensemble.delta)
+    lb0 = np.where(ensemble.core_mask, 0.0, PAD_LB)
+
+    if Fp == 0:
+        # Nothing to place anywhere in the ensemble: zero prefix stats.
+        core = np.zeros((Bp, 0), dtype=np.int64)
+        rho = np.zeros((Bp, Kp, Pp))
+        tau = np.zeros((Bp, Kp, Pp))
+        prefix_lb = np.zeros(ends.shape)
+    else:
+        zeros_kp = np.zeros((Bp, Kp, Pp))
+        with enable_x64():
+            from repro.launch.mesh import place
+
+            put = lambda x: place(x, ensemble.sharding)  # noqa: E731
+            ks, lbs, rho, tau = _scan_all(
+                put(pi.astype(np.int32)), put(pj.astype(np.int32)),
+                put(size), put(valid),
+                put(ensemble.inv_rates), put(delta),
+                put(np.ones(Bp, dtype=np.float64)),
+                put(lb0), put(ensemble.core_mask),
+                put(zeros_kp), put(zeros_kp),
+            )
+        core = np.asarray(ks).astype(np.int64)
+        lbs = np.asarray(lbs)
+        rho = np.asarray(rho)
+        tau = np.asarray(tau)
+        # lb starts all-zero, so before any flow lands the prefix LB is 0.
+        prefix_lb = np.where(
+            ends > 0,
+            np.take_along_axis(lbs, np.maximum(ends - 1, 0), axis=1),
+            0.0,
+        ).astype(np.float64)
+
+    return AllocationBatch(
+        order=np.asarray(orders), perm=perm, coflow=coflow, src=src, dst=dst,
+        size=size, valid=valid, core=core, rho_ports=rho, tau_ports=tau,
+        prefix_lb=prefix_lb, ends=ends,
+    )
+
+
 def allocate_batch(
     instances: Sequence[CoflowInstance],
     orders: Sequence[np.ndarray],
@@ -137,88 +220,20 @@ def allocate_batch(
 ) -> list[Allocation]:
     """Greedy allocation for a whole ensemble in one vectorized program.
 
+    List-in/list-out wrapper over the array pipeline: builds one
+    `EnsembleBatch`, runs `allocate_batch_arrays`, materializes.
     Equivalent to ``[allocate(inst, order, include_tau) for ...]`` with
-    bit-identical results (see module docstring); instances may differ in
-    every dimension (M, N, K, flow count, rates, delta).
+    bit-identical results; instances may differ in every dimension
+    (M, N, K, flow count, rates, delta).
     """
     instances = list(instances)
     if len(instances) != len(orders):
         raise ValueError("instances/orders length mismatch")
-    B = len(instances)
-    if B == 0:
+    if not instances:
         return []
-    seqs = [flow_sequence(inst, o) for inst, o in zip(instances, orders)]
-    Fs = [s[0].shape[0] for s in seqs]
-    Fmax = max(Fs)
-    Kmax = max(inst.num_cores for inst in instances)
-    Pmax = max(2 * inst.num_ports for inst in instances)
-
-    if Fmax == 0:
-        # Nothing to place anywhere in the ensemble; emit empty allocations
-        # with the zero prefix stats the oracle would produce.
-        return [
-            Allocation(
-                coflow=seq[0], src=seq[1], dst=seq[2], size=seq[3],
-                core=np.zeros(0, dtype=np.int64),
-                rho_ports=np.zeros((inst.num_cores, 2 * inst.num_ports)),
-                tau_ports=np.zeros((inst.num_cores, 2 * inst.num_ports)),
-                prefix_lb=np.zeros(inst.num_coflows),
-            )
-            for inst, seq in zip(instances, seqs)
-        ]
-
-    pi = np.zeros((B, Fmax), dtype=np.int32)
-    pj = np.zeros((B, Fmax), dtype=np.int32)
-    d = np.zeros((B, Fmax), dtype=np.float64)
-    valid = np.zeros((B, Fmax), dtype=bool)
-    inv_rates = np.full((B, Kmax), _PAD_LB, dtype=np.float64)
-    delta = np.zeros(B, dtype=np.float64)
-    lb0 = np.full((B, Kmax), _PAD_LB, dtype=np.float64)
-    core_mask = np.zeros((B, Kmax), dtype=bool)
-    for b, (inst, seq) in enumerate(zip(instances, seqs)):
-        _, i_idx, j_idx, sizes, _ = seq
-        F, K, N = Fs[b], inst.num_cores, inst.num_ports
-        pi[b, :F] = i_idx
-        pj[b, :F] = N + j_idx
-        d[b, :F] = sizes
-        valid[b, :F] = True
-        inv_rates[b, :K] = 1.0 / inst.rates
-        delta[b] = inst.delta if include_tau else 0.0
-        lb0[b, :K] = 0.0
-        core_mask[b, :K] = True
-
-    zeros_kp = np.zeros((B, Kmax, Pmax), dtype=np.float64)
-    with enable_x64():
-        ks, lbs, rho, tau = _scan_all(
-            jnp.asarray(pi), jnp.asarray(pj), jnp.asarray(d),
-            jnp.asarray(valid), jnp.asarray(inv_rates), jnp.asarray(delta),
-            jnp.asarray(np.ones(B, dtype=np.float64)),
-            jnp.asarray(lb0), jnp.asarray(core_mask),
-            jnp.asarray(zeros_kp), jnp.asarray(zeros_kp),
-        )
-    ks = np.asarray(ks)
-    lbs = np.asarray(lbs)
-    rho = np.asarray(rho)
-    tau = np.asarray(tau)
-
-    out = []
-    for b, (inst, seq) in enumerate(zip(instances, seqs)):
-        coflow, i_idx, j_idx, sizes, ends = seq
-        F, K, N = Fs[b], inst.num_cores, inst.num_ports
-        # lb starts all-zero, so before any flow lands the prefix LB is 0.
-        prefix_lb = np.where(
-            ends > 0, lbs[b][np.maximum(ends - 1, 0)], 0.0
-        ).astype(np.float64)
-        out.append(
-            Allocation(
-                coflow=coflow,
-                src=i_idx,
-                dst=j_idx,
-                size=sizes,
-                core=ks[b, :F].astype(np.int64),
-                rho_ports=rho[b, :K, : 2 * N],
-                tau_ports=tau[b, :K, : 2 * N],
-                prefix_lb=prefix_lb,
-            )
-        )
-    return out
+    # Allocation never reads the LP solver inputs; skip packing them.
+    ensemble = build_ensemble_batch(instances, with_lp_arrays=False)
+    batch = allocate_batch_arrays(
+        ensemble, ensemble.pad_orders(orders), include_tau=include_tau
+    )
+    return batch.materialize(ensemble)

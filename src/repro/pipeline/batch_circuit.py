@@ -81,8 +81,14 @@ from repro.core.allocation import Allocation
 from repro.core.circuit import NOT_SCHEDULED, CoreSchedule
 from repro.core.coflow import CoflowInstance
 from repro.core.validate import ccts_from_schedules
+from repro.pipeline.ensemble_batch import AllocationBatch, EnsembleBatch
 
-__all__ = ["schedule_batch", "member_tables", "event_bound"]
+__all__ = [
+    "schedule_batch",
+    "schedule_batch_arrays",
+    "member_tables",
+    "event_bound",
+]
 
 # Bucket quanta: flows, ports and members round up to these so that
 # near-shaped ensembles (e.g. the same sweep under both disciplines, or
@@ -482,6 +488,94 @@ def _run_calendar_wide(
     return out_est, out_comp
 
 
+def _check_engine(discipline: str, engine: str) -> str:
+    if discipline not in ("reserving", "greedy"):
+        raise ValueError(f"unknown discipline {discipline!r}")
+    if engine not in ("auto", "jax", "wide"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "auto":
+        from repro.kernels.common import use_interpret
+
+        engine = "wide" if use_interpret() else "jax"
+    return engine
+
+
+def _execute_members(
+    tabs: Sequence[dict],
+    num_ports_max: int,
+    discipline: str,
+    engine: str,
+    labels: Sequence[str],
+    sharding=None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-member flow tables and run the selected calendar executor.
+
+    ``tabs`` holds one dict per (instance, core) member with F_k > 0
+    (keys: src/dst/rel/dur as in `member_tables`); returns the (G, Fmax)
+    establishment/completion arrays (G rows >= len(tabs), padding rows
+    garbage).  ``sharding`` places the JAX executor's inputs with a
+    data-axis `NamedSharding` (member rows round up to the shard count);
+    the wide engine is host-side NumPy and ignores it.
+    """
+    G = _round_up(len(tabs), _G_QUANTUM)
+    if sharding is not None and engine == "jax":
+        G = _round_up(G, int(sharding.mesh.shape["data"]))
+    Fmax = _round_up(max(t["src"].shape[0] for t in tabs), _F_QUANTUM)
+    Nmax = _round_up(num_ports_max, _N_QUANTUM)
+    src = np.zeros((G, Fmax), dtype=np.int32)
+    dst = np.zeros((G, Fmax), dtype=np.int32)
+    skey = np.full((G, Fmax), Nmax, dtype=np.int64)
+    dkey = np.full((G, Fmax), Nmax, dtype=np.int64)
+    rel = np.zeros((G, Fmax), dtype=np.float64)
+    dur = np.zeros((G, Fmax), dtype=np.float64)
+    pending = np.zeros((G, Fmax), dtype=bool)
+    for g, tab in enumerate(tabs):
+        F = tab["src"].shape[0]
+        src[g, :F] = tab["src"]
+        dst[g, :F] = tab["dst"]
+        skey[g, :F] = tab["src"]
+        dkey[g, :F] = tab["dst"]
+        rel[g, :F] = tab["rel"]
+        dur[g, :F] = tab["dur"]
+        pending[g, :F] = True
+    if engine == "wide":
+        return _run_calendar_wide(
+            src, dst, rel, dur, pending, Nmax,
+            reserving=discipline == "reserving",
+            bound=event_bound(Fmax) + Fmax,
+            labels=list(labels),
+        )
+    psrc, soff, send, sempty = _port_segments(skey, Nmax)
+    pdst, doff, dend, dempty = _port_segments(dkey, Nmax)
+    with enable_x64():
+        from repro.launch.mesh import place
+
+        put = lambda x: place(x, sharding)  # noqa: E731
+        est, comp, unfinished, stalled = _run_calendar(
+            put(src), put(dst), put(rel),
+            put(dur), put(pending),
+            put(np.zeros((G, Nmax), dtype=np.float64)),
+            put(psrc), put(soff),
+            put(send), put(sempty),
+            put(pdst), put(doff),
+            put(dend), put(dempty),
+            reserving=discipline == "reserving",
+            bound=event_bound(Fmax),
+        )
+    est = np.asarray(est)
+    comp = np.asarray(comp)
+    unfinished = np.asarray(unfinished)
+    stalled = np.asarray(stalled)
+    for g, label in enumerate(labels):
+        if stalled[g]:
+            raise RuntimeError(f"batched scheduler stalled ({label})")
+        if unfinished[g]:  # pragma: no cover - bound is large
+            raise RuntimeError(
+                f"batched scheduler exceeded the event bound ({label})"
+            )
+    return est, comp
+
+
 def schedule_batch(
     instances: Sequence[CoflowInstance],
     allocs: Sequence[Allocation],
@@ -494,7 +588,11 @@ def schedule_batch(
     Equivalent to running `repro.core.scheduler._schedule_all_cores` (and
     `ccts_from_schedules`) per instance, with bit-identical establishment
     and completion times; returns one ``(core_schedules, ccts)`` pair per
-    instance, matching `CircuitStage.schedule`.
+    instance, matching `CircuitStage.schedule`.  This is the
+    list-of-`Allocation` oracle API; the production batch path is
+    `schedule_batch_arrays`, which consumes the unified `EnsembleBatch` /
+    `AllocationBatch` pytrees instead of re-extracting member tables from
+    instances.
 
     ``engine`` selects the calendar executor: ``"jax"`` (the vmapped
     `lax.while_loop`, the accelerator path), ``"wide"`` (the lockstep
@@ -502,14 +600,7 @@ def schedule_batch(
     without an accelerator, mirroring the kernels' interpret-mode
     convention).  Both are bit-identical to the oracle and to each other.
     """
-    if discipline not in ("reserving", "greedy"):
-        raise ValueError(f"unknown discipline {discipline!r}")
-    if engine not in ("auto", "jax", "wide"):
-        raise ValueError(f"unknown engine {engine!r}")
-    if engine == "auto":
-        from repro.kernels.common import use_interpret
-
-        engine = "wide" if use_interpret() else "jax"
+    engine = _check_engine(discipline, engine)
     instances = list(instances)
     if not (len(instances) == len(allocs) == len(orders)):
         raise ValueError("instances/allocs/orders length mismatch")
@@ -530,67 +621,13 @@ def schedule_batch(
                 members.append((b, k, tab))
 
     if members:
-        G = _round_up(len(members), _G_QUANTUM)
-        Fmax = _round_up(
-            max(m[2]["coflow"].shape[0] for m in members), _F_QUANTUM
+        est, comp = _execute_members(
+            [tab for _, _, tab in members],
+            max(inst.num_ports for inst in instances),
+            discipline,
+            engine,
+            labels=[f"instance {b}, core {k}" for b, k, _ in members],
         )
-        Nmax = _round_up(
-            max(inst.num_ports for inst in instances), _N_QUANTUM
-        )
-        src = np.zeros((G, Fmax), dtype=np.int32)
-        dst = np.zeros((G, Fmax), dtype=np.int32)
-        skey = np.full((G, Fmax), Nmax, dtype=np.int64)
-        dkey = np.full((G, Fmax), Nmax, dtype=np.int64)
-        rel = np.zeros((G, Fmax), dtype=np.float64)
-        dur = np.zeros((G, Fmax), dtype=np.float64)
-        pending = np.zeros((G, Fmax), dtype=bool)
-        for g, (_, _, tab) in enumerate(members):
-            F = tab["coflow"].shape[0]
-            src[g, :F] = tab["src"]
-            dst[g, :F] = tab["dst"]
-            skey[g, :F] = tab["src"]
-            dkey[g, :F] = tab["dst"]
-            rel[g, :F] = tab["rel"]
-            dur[g, :F] = tab["dur"]
-            pending[g, :F] = True
-        if engine == "wide":
-            est, comp = _run_calendar_wide(
-                src, dst, rel, dur, pending, Nmax,
-                reserving=discipline == "reserving",
-                bound=event_bound(Fmax) + Fmax,
-                labels=[
-                    f"instance {b}, core {k}" for b, k, _ in members
-                ],
-            )
-        else:
-            psrc, soff, send, sempty = _port_segments(skey, Nmax)
-            pdst, doff, dend, dempty = _port_segments(dkey, Nmax)
-            with enable_x64():
-                est, comp, unfinished, stalled = _run_calendar(
-                    jnp.asarray(src), jnp.asarray(dst), jnp.asarray(rel),
-                    jnp.asarray(dur), jnp.asarray(pending),
-                    jnp.zeros((G, Nmax), jnp.float64),
-                    jnp.asarray(psrc), jnp.asarray(soff),
-                    jnp.asarray(send), jnp.asarray(sempty),
-                    jnp.asarray(pdst), jnp.asarray(doff),
-                    jnp.asarray(dend), jnp.asarray(dempty),
-                    reserving=discipline == "reserving",
-                    bound=event_bound(Fmax),
-                )
-            est = np.asarray(est)
-            comp = np.asarray(comp)
-            unfinished = np.asarray(unfinished)
-            stalled = np.asarray(stalled)
-            for g, (b, k, _) in enumerate(members):
-                if stalled[g]:
-                    raise RuntimeError(
-                        f"batched scheduler stalled (instance {b}, core {k})"
-                    )
-                if unfinished[g]:  # pragma: no cover - bound is large
-                    raise RuntimeError(
-                        f"batched scheduler exceeded the event bound "
-                        f"(instance {b}, core {k})"
-                    )
 
     schedules_by_member = {
         (b, k): g for g, (b, k, _) in enumerate(members)
@@ -624,5 +661,103 @@ def schedule_batch(
             )
         out.append(
             (schedules, ccts_from_schedules(inst.num_coflows, schedules))
+        )
+    return out
+
+
+def schedule_batch_arrays(
+    ensemble: EnsembleBatch,
+    alloc: AllocationBatch,
+    discipline: str = "reserving",
+    engine: str = "auto",
+) -> list[tuple[list[CoreSchedule], np.ndarray]]:
+    """Circuit-schedule straight off the unified padded pytrees.
+
+    The `AllocationBatch` flow axis is already in scheduling priority
+    order (global order, largest-first within coflow), so each (instance,
+    core) member table is a pure stable partition of the batch arrays —
+    releases, rates and delta come from the `EnsembleBatch`, and no
+    `CoflowInstance` or `Allocation` object is touched.  Member tables,
+    executors and outputs are bit-identical to `schedule_batch`
+    (`member_tables` sorts by flow priority with a stable sort, which on
+    a priority-ordered table is exactly the per-core subsequence).
+
+    Per-instance `CoreSchedule`s / CCT vectors are materialized here —
+    the circuit is the pipeline's last array stage.  When the batch
+    carries a `NamedSharding`, the JAX executor's member axis is padded
+    to the shard count and placed with it.
+    """
+    engine = _check_engine(discipline, engine)
+    B = ensemble.num_instances
+    if B == 0:
+        return []
+
+    members = []  # (b, k, flow-row indices into the ordered flow axis)
+    for b in range(B):
+        coreb = alloc.core[b]
+        validb = alloc.valid[b]
+        for k in range(ensemble.num_cores[b]):
+            idx = np.nonzero(validb & (coreb == k))[0]
+            if idx.size:
+                members.append((b, k, idx))
+
+    if members:
+        tabs = [
+            dict(
+                src=alloc.src[b, idx],
+                dst=alloc.dst[b, idx],
+                rel=ensemble.releases[b, alloc.coflow[b, idx]],
+                dur=ensemble.delta[b]
+                + alloc.size[b, idx] / ensemble.rates[b, k],
+            )
+            for b, k, idx in members
+        ]
+        est, comp = _execute_members(
+            tabs,
+            max(ensemble.num_ports[b] for b in range(B)),
+            discipline,
+            engine,
+            labels=[f"instance {b}, core {k}" for b, k, _ in members],
+            sharding=ensemble.sharding,
+        )
+
+    schedules_by_member = {
+        (b, k): g for g, (b, k, _) in enumerate(members)
+    }
+    out = []
+    for b in range(B):
+        schedules = []
+        for k in range(ensemble.num_cores[b]):
+            g = schedules_by_member.get((b, k))
+            if g is None:
+                z = np.zeros(0)
+                zi = np.zeros(0, dtype=np.int64)
+                schedules.append(
+                    CoreSchedule(
+                        zi, zi, zi, z, z, z,
+                        float(ensemble.rates[b, k]),
+                        float(ensemble.delta[b]),
+                    )
+                )
+                continue
+            _, _, idx = members[g]
+            F = idx.shape[0]
+            schedules.append(
+                CoreSchedule(
+                    coflow=alloc.coflow[b, idx],
+                    src=alloc.src[b, idx],
+                    dst=alloc.dst[b, idx],
+                    size=alloc.size[b, idx],
+                    establish=est[g, :F].copy(),
+                    complete=comp[g, :F].copy(),
+                    rate=float(ensemble.rates[b, k]),
+                    delta=float(ensemble.delta[b]),
+                )
+            )
+        out.append(
+            (
+                schedules,
+                ccts_from_schedules(ensemble.num_coflows[b], schedules),
+            )
         )
     return out

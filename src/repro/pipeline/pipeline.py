@@ -5,14 +5,18 @@
 
   * `run(instance)` — per-instance, parity with the legacy
     `repro.core.scheduler.run` (which now delegates here);
-  * `run_batch(ensemble)` — batch-first: consumes the shared LP solutions
-    of `lp.solve_subgradient_batch` / `experiments.solve_ensemble_lp`
-    directly and executes both the allocation stage
-    (`repro.pipeline.batch_alloc`) and the list-scheduler circuit stage
-    (`repro.pipeline.batch_circuit`) vectorized across the ensemble axis,
-    falling back to the per-instance loop only for stages without a
-    batched form (``require_batch=True`` turns a fallback of a
-    batch-capable stage into an error).
+  * `run_batch(ensemble)` — batch-first and array-first: the instance
+    list is packed **once** into the unified padded
+    `repro.pipeline.ensemble_batch.EnsembleBatch` pytree, and ordering
+    (`order_batch`), allocation (`allocate_batch_arrays` ->
+    `AllocationBatch`) and circuit scheduling (`schedule_batch_arrays`)
+    hand padded arrays to each other with no per-stage host re-padding;
+    per-instance `ScheduleResult`s are materialized only at the end.
+    Stages without an array form fall back to their legacy batched list
+    APIs and then to the per-instance loop (``require_batch=True`` turns
+    a fallback of a batch-capable stage into an error).  With ``mesh=``
+    the batch is sharded across the mesh's ``data`` axis and every jitted
+    stage runs SPMD over the ensemble.
 
 `build_pipeline` materializes a declarative `SchemeSpec` into stages via
 per-kind factories — scheme *names* never drive execution, only stage
@@ -25,14 +29,53 @@ import dataclasses
 import time
 from typing import Any, Sequence
 
+import numpy as np
+
 from repro.core.coflow import CoflowInstance
 from repro.core.lp import LPSolution
 from repro.core.scheduler import ScheduleResult, total_weighted_cct
 from repro.core.validate import validate_schedule
 from repro.pipeline import stages as st
+from repro.pipeline.ensemble_batch import EnsembleBatch, build_ensemble_batch
 from repro.pipeline.spec import SchemeSpec, get_scheme
 
 __all__ = ["Pipeline", "build_pipeline", "get_pipeline"]
+
+#: Reserved `stage_cache` keys: the ensemble fingerprint guarding against
+#: cross-ensemble reuse, and the shared `EnsembleBatch` built once per
+#: ensemble (all schemes of a sweep read the same padded pytree).
+_FINGERPRINT_KEY = "__ensemble_fingerprint__"
+_ENSEMBLE_KEY = "__ensemble_batch__"
+
+
+def _ensemble_fingerprint(instances, lp_solutions) -> tuple:
+    """Identity of the (instances, lp_solutions) pair a stage_cache binds to.
+
+    Holds strong references to the objects themselves (not bare ``id``s,
+    which CPython reuses after garbage collection): as long as the cache
+    lives, no other ensemble can alias this fingerprint, so reuse of one
+    dict across different ensembles is a hard error instead of a silent
+    stale-read.
+    """
+    return (
+        tuple(instances),
+        None if lp_solutions is None else tuple(lp_solutions),
+    )
+
+
+def _same_fingerprint(a: tuple, b: tuple) -> bool:
+    """Element-wise *identity* comparison of two fingerprints (instances
+    and LP solutions hold arrays, so ``==`` equality is neither cheap nor
+    well-defined; identity is the contract the cache binds to)."""
+
+    def same_seq(xs, ys):
+        if xs is None or ys is None:
+            return xs is ys
+        return len(xs) == len(ys) and all(
+            x is y for x, y in zip(xs, ys)
+        )
+
+    return same_seq(a[0], b[0]) and same_seq(a[1], b[1])
 
 
 @dataclasses.dataclass
@@ -101,8 +144,21 @@ class Pipeline:
         validate: bool = True,
         require_batch: bool = False,
         stage_cache: dict | None = None,
+        ensemble: EnsembleBatch | None = None,
+        mesh=None,
     ) -> list[ScheduleResult]:
-        """Run a whole ensemble with the allocation stage batched.
+        """Run a whole ensemble as one array pipeline over an `EnsembleBatch`.
+
+        The instance list is packed exactly once into the unified padded
+        pytree (``ensemble`` plugs a prebuilt one in; with a
+        ``stage_cache`` the build is shared across every scheme of a
+        sweep) and the stages exchange padded arrays: `order_batch`
+        produces the (Bp, Mp) order array, `allocate_batch_arrays` the
+        `AllocationBatch`, `schedule_batch_arrays` the calendar outputs.
+        Per-instance `ScheduleResult`s are materialized only at the end.
+        ``mesh`` shards the member axis over the mesh's ``data`` axis
+        (see `repro.pipeline.ensemble_batch`); results are bit-identical
+        to the unsharded run.
 
         ``lp_solutions`` plugs the output of `solve_subgradient_batch` /
         `solve_ensemble_lp` straight in (one solution per instance, input
@@ -118,59 +174,141 @@ class Pipeline:
         ordering pass and one batched allocation — and pipelines that
         differ only in circuit *discipline* (e.g. greedy vs reserving
         OURS, as `sweep(certify=True)` runs) additionally share everything
-        up to the circuit stage.  The cache is keyed by stage kind +
-        config, so it must not be reused across different ensembles.
+        up to the circuit stage.  The cache binds to the ensemble it was
+        first used on (an identity fingerprint of instances and LP
+        solutions): reusing one dict across different ensembles raises
+        `ValueError` instead of silently returning stale stage outputs.
         """
         instances = list(instances)
         B = len(instances)
-        if lp_solutions is None:
-            lp_solutions = [None] * B
-        if len(lp_solutions) != B:
-            raise ValueError("lp_solutions length mismatch")
-        ordered = None if stage_cache is None else stage_cache.get(
+        if lp_solutions is not None:
+            lp_solutions = list(lp_solutions)
+            if len(lp_solutions) != B:
+                raise ValueError("lp_solutions length mismatch")
+        if stage_cache is not None:
+            fp = _ensemble_fingerprint(instances, lp_solutions)
+            prev = stage_cache.setdefault(_FINGERPRINT_KEY, fp)
+            if prev is not fp and not _same_fingerprint(prev, fp):
+                raise ValueError(
+                    "stage_cache reuse across different ensembles: this "
+                    "cache was built for another (instances, lp_solutions) "
+                    "pair — pass a fresh dict per ensemble"
+                )
+        if B == 0:
+            return []
+
+        # --- the unified padded pytree: built once per ensemble ----------
+        if ensemble is None and stage_cache is not None:
+            ensemble = stage_cache.get(_ENSEMBLE_KEY)
+        if ensemble is None:
+            # run_batch never solves the ordering LP itself (solutions are
+            # supplied, or LP-needing stages solve per instance), so skip
+            # packing the heavy LP solver inputs.
+            ensemble = build_ensemble_batch(
+                instances, mesh=mesh, with_lp_arrays=False
+            )
+        elif mesh is not None:
+            # A cached/provided batch carries its own sharding; a
+            # *different* explicit mesh request must not be silently
+            # dropped.  (mesh=None inherits whatever the batch has.)
+            from repro.launch.mesh import data_sharding
+
+            if ensemble.sharding != data_sharding(mesh):
+                raise ValueError(
+                    "run_batch(mesh=...) does not match the sharding of "
+                    "the cached/provided EnsembleBatch — pass the same "
+                    "mesh on every call sharing a stage_cache (or a "
+                    "fresh cache)"
+                )
+        if stage_cache is not None:
+            stage_cache.setdefault(_ENSEMBLE_KEY, ensemble)
+        Ms = ensemble.num_coflows
+
+        # --- ordering: one (Bp, Mp) array for the whole ensemble ----------
+        cached = None if stage_cache is None else stage_cache.get(
             self._order_key()
         )
-        if ordered is None:
-            ordered = [
-                self.order_stage.order(inst, sol)
-                for inst, sol in zip(instances, lp_solutions)
-            ]
+        if cached is None:
+            orders_arr = None
+            lp_list = lp_solutions
+            order_batch_fn = getattr(self.order_stage, "order_batch", None)
+            if order_batch_fn is not None:
+                if getattr(self.order_stage, "needs_lp", False):
+                    if lp_solutions is not None and all(
+                        sol is not None for sol in lp_solutions
+                    ):
+                        comp = np.zeros(ensemble.weights.shape)
+                        for b, sol in enumerate(lp_solutions):
+                            comp[b, : Ms[b]] = sol.completion
+                        orders_arr = order_batch_fn(ensemble, comp)
+                else:
+                    orders_arr = order_batch_fn(ensemble)
+                    lp_list = [None] * B
+            if orders_arr is None:
+                # Stage has no array form (or needs an LP it must solve
+                # itself): per-instance ordering, padded once.
+                sols_in = lp_solutions or [None] * B
+                ordered = [
+                    self.order_stage.order(inst, sol)
+                    for inst, sol in zip(instances, sols_in)
+                ]
+                orders_arr = ensemble.pad_orders([o for o, _ in ordered])
+                lp_list = [s for _, s in ordered]
+            cached = (orders_arr, lp_list)
             if stage_cache is not None:
-                stage_cache[self._order_key()] = ordered
-        orders = [o for o, _ in ordered]
+                stage_cache[self._order_key()] = cached
+        orders_arr, lp_list = cached
+        lp_list = lp_list if lp_list is not None else [None] * B
+        orders = [orders_arr[b, : Ms[b]] for b in range(B)]
 
+        # --- allocation: AllocationBatch, materialized once ---------------
         t0 = time.perf_counter()
-        allocs = None if stage_cache is None else stage_cache.get(
+        a_cached = None if stage_cache is None else stage_cache.get(
             self._alloc_key()
         )
-        if allocs is None:
-            batch_fn = getattr(self.allocate_stage, "allocate_batch", None)
-            allocs = (
-                batch_fn(instances, orders) if batch_fn is not None else None
+        if a_cached is None:
+            alloc_batch = None
+            arrays_fn = getattr(
+                self.allocate_stage, "allocate_batch_arrays", None
             )
-            if allocs is None:
-                if require_batch:
-                    raise RuntimeError(
-                        f"run_batch fell back to the per-instance allocation "
-                        f"loop for scheme {self.spec.key!r} "
-                        f"(allocation stage "
-                        f"{type(self.allocate_stage).__name__} "
-                        f"has no batched path)"
-                    )
-                allocs = [
-                    self.allocate_stage.allocate(inst, o)
-                    for inst, o in zip(instances, orders)
-                ]
+            if arrays_fn is not None:
+                alloc_batch = arrays_fn(ensemble, orders_arr)
+            if alloc_batch is not None:
+                allocs = alloc_batch.materialize(ensemble)
+            else:
+                batch_fn = getattr(
+                    self.allocate_stage, "allocate_batch", None
+                )
+                allocs = (
+                    batch_fn(instances, orders)
+                    if batch_fn is not None
+                    else None
+                )
+                if allocs is None:
+                    if require_batch:
+                        raise RuntimeError(
+                            f"run_batch fell back to the per-instance "
+                            f"allocation loop for scheme {self.spec.key!r} "
+                            f"(allocation stage "
+                            f"{type(self.allocate_stage).__name__} "
+                            f"has no batched path)"
+                        )
+                    allocs = [
+                        self.allocate_stage.allocate(inst, o)
+                        for inst, o in zip(instances, orders)
+                    ]
+            a_cached = (alloc_batch, allocs)
             if stage_cache is not None:
-                stage_cache[self._alloc_key()] = allocs
+                stage_cache[self._alloc_key()] = a_cached
+        alloc_batch, allocs = a_cached
         alloc_share = (time.perf_counter() - t0) / max(B, 1)
 
-        # Circuit stage: batched across the ensemble when the stage has a
-        # batched form (`ListCircuit` backend "batch"); stages without one
-        # (sequential / bvn / fluid — baselines whose calendars are
-        # inherently per-instance) run the loop.  ``require_batch`` turns
-        # a *fallback* of a batch-capable stage (e.g. backend "loop") into
-        # an error, but leaves loop-only stages alone.
+        # --- circuit: padded calendar off the pytrees ---------------------
+        # Stages without any batched form (sequential / bvn / fluid —
+        # baselines whose calendars are inherently per-instance) run the
+        # loop.  ``require_batch`` turns a *fallback* of a batch-capable
+        # stage (e.g. backend "loop") into an error, but leaves loop-only
+        # stages alone.
         per_instance_s = None
         circuit_share = 0.0
         pairs = None if stage_cache is None else stage_cache.get(
@@ -178,14 +316,18 @@ class Pipeline:
         )
         if pairs is None:
             t1 = time.perf_counter()
-            batch_fn = getattr(self.circuit_stage, "schedule_batch", None)
-            pairs = (
-                batch_fn(instances, allocs, orders)
-                if batch_fn is not None
-                else None
+            arrays_fn = getattr(
+                self.circuit_stage, "schedule_batch_arrays", None
             )
+            batch_fn = getattr(self.circuit_stage, "schedule_batch", None)
+            if arrays_fn is not None and alloc_batch is not None:
+                pairs = arrays_fn(ensemble, alloc_batch)
+            if pairs is None and batch_fn is not None:
+                pairs = batch_fn(instances, allocs, orders)
             if pairs is None:
-                if require_batch and batch_fn is not None:
+                if require_batch and (
+                    arrays_fn is not None or batch_fn is not None
+                ):
                     raise RuntimeError(
                         f"run_batch fell back to the per-instance circuit "
                         f"loop for scheme {self.spec.key!r} (circuit stage "
@@ -204,9 +346,10 @@ class Pipeline:
             if stage_cache is not None:
                 stage_cache[self._circuit_key()] = pairs
 
+        # --- materialize per-instance results (end of the pipeline) -------
         results = []
-        for i, (inst, (order, lp_sol), alloc) in enumerate(
-            zip(instances, ordered, allocs)
+        for i, (inst, order, lp_sol, alloc) in enumerate(
+            zip(instances, orders, lp_list, allocs)
         ):
             schedules, ccts = pairs[i]
             if validate and schedules is not None:

@@ -83,8 +83,11 @@ class AllocateStage(Protocol):
     ) -> Allocation:
         ...
 
-    # Optional: `allocate_batch(instances, orders) -> list[Allocation] | None`
-    # for ensemble execution; absent or None means fall back to the loop.
+    # Optional batched forms (absent or returning None means fall back):
+    #   allocate_batch_arrays(ensemble, orders) -> AllocationBatch | None
+    #     — the array path over the unified EnsembleBatch pytree;
+    #   allocate_batch(instances, orders) -> list[Allocation] | None
+    #     — the legacy list path.
 
 
 @runtime_checkable
@@ -101,14 +104,30 @@ class CircuitStage(Protocol):
     ) -> tuple[list[CoreSchedule] | None, np.ndarray]:
         ...
 
-    # Optional: `schedule_batch(instances, allocs, orders) ->
-    # list[(schedules, ccts)] | None` for ensemble execution; absent or
-    # None means fall back to the per-instance loop.
+    # Optional batched forms (absent or returning None means fall back):
+    #   schedule_batch_arrays(ensemble, alloc_batch) ->
+    #     list[(schedules, ccts)] | None — the array path;
+    #   schedule_batch(instances, allocs, orders) ->
+    #     list[(schedules, ccts)] | None — the legacy list path.
+    # Optional batched order form on OrderStage:
+    #   order_batch(ensemble, lp_completion=None) -> (Bp, Mp) array | None.
 
 
 # ---------------------------------------------------------------------------
 # Ordering stages
 # ---------------------------------------------------------------------------
+
+
+def _masked_stable_order(key: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """(B, Mp) stable argsort with padded slots pushed to the tail.
+
+    Row ``b`` restricted to its real prefix is bit-identical to the
+    per-instance ``np.argsort(key_b, kind="stable")``: masking padded
+    slots to +inf cannot disturb the relative order of real entries.
+    """
+    return np.argsort(
+        np.where(mask, key, np.inf), axis=1, kind="stable"
+    )
 
 
 class LPOrder:
@@ -131,6 +150,14 @@ class LPOrder:
             )
         return lp_solution.order(), lp_solution
 
+    def order_batch(self, ensemble, lp_completion=None):
+        """(Bp, Mp) padded orders from padded LP completion times; None
+        (fall back to the per-instance loop) when no shared LP batch is
+        available — this stage must then solve per instance."""
+        if lp_completion is None:
+            return None
+        return _masked_stable_order(lp_completion, ensemble.coflow_mask)
+
 
 class WsptOrder:
     """WSPT-ORDER baseline [31]: non-increasing w_m / T_LB(D_m)."""
@@ -141,6 +168,11 @@ class WsptOrder:
     def order(self, instance, lp_solution=None):
         return wspt_order(instance), None
 
+    def order_batch(self, ensemble, lp_completion=None):
+        # Same f64 elementwise arithmetic as `wspt_order`, whole bucket.
+        score = ensemble.weights / np.maximum(ensemble.glb, 1e-300)
+        return _masked_stable_order(-score, ensemble.coflow_mask)
+
 
 class FifoOrder:
     """Release-time FIFO — ablation reference."""
@@ -150,6 +182,11 @@ class FifoOrder:
 
     def order(self, instance, lp_solution=None):
         return fifo_order(instance), None
+
+    def order_batch(self, ensemble, lp_completion=None):
+        return _masked_stable_order(
+            ensemble.releases, ensemble.coflow_mask
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +211,14 @@ class GreedyAllocate:
 
         return allocate_batch(
             instances, orders, include_tau=self.include_tau
+        )
+
+    def allocate_batch_arrays(self, ensemble, orders):
+        """Array form: `EnsembleBatch` + (Bp, Mp) orders -> `AllocationBatch`."""
+        from repro.pipeline.batch_alloc import allocate_batch_arrays
+
+        return allocate_batch_arrays(
+            ensemble, orders, include_tau=self.include_tau
         )
 
 
@@ -215,6 +260,18 @@ class ListCircuit:
 
         return schedule_batch(
             instances, allocs, orders, discipline=self.discipline
+        )
+
+    def schedule_batch_arrays(self, ensemble, alloc_batch):
+        """Array form: padded pytrees in, per-instance (schedules, ccts)
+        out; None under the ``"loop"`` backend so `Pipeline.run_batch`
+        falls back (or errors under ``require_batch``)."""
+        if self.backend != "batch":
+            return None
+        from repro.pipeline.batch_circuit import schedule_batch_arrays
+
+        return schedule_batch_arrays(
+            ensemble, alloc_batch, discipline=self.discipline
         )
 
 

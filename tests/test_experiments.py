@@ -28,10 +28,15 @@ def _ens():
 
 # ------------------------------------------------------------------ buckets
 def test_bucket_shape_quanta():
+    from repro.experiments.ensemble import COLLAPSED
+
     inst = random_instance(num_coflows=6, num_ports=3, seed=0)
     assert bucket_shape(inst, 8, 8) == (8, 8)
     assert bucket_shape(inst, 1, 1) == (6, 6)
-    assert bucket_shape(inst, None, None) == (0, 0)  # resolved in build
+    # "collapse to ensemble max" is a distinct sentinel (resolved in
+    # build_buckets), not 0 — 0 is what a genuinely empty axis rounds to.
+    assert bucket_shape(inst, None, None) == (COLLAPSED, COLLAPSED)
+    assert COLLAPSED != 0
 
 
 def test_build_buckets_partition():
@@ -139,13 +144,13 @@ def test_sweep_certify_shares_stages_across_disciplines(monkeypatch):
     from repro.pipeline import batch_alloc
 
     calls = {"n": 0}
-    real = batch_alloc.allocate_batch
+    real = batch_alloc.allocate_batch_arrays
 
     def counting(*args, **kwargs):
         calls["n"] += 1
         return real(*args, **kwargs)
 
-    monkeypatch.setattr(batch_alloc, "allocate_batch", counting)
+    monkeypatch.setattr(batch_alloc, "allocate_batch_arrays", counting)
     ens = [
         random_instance(num_coflows=6, num_ports=3, seed=0),
         random_instance(num_coflows=5, num_ports=3, seed=1),

@@ -178,9 +178,13 @@ def test_run_batch_stage_cache_shares_order_and_allocation(grid_with_lp):
         assert a.allocation is b.allocation
     for a, b in zip(by_scheme["ours"], by_scheme["load_only"]):
         assert a.allocation is not b.allocation
-    # one order key (lp), two alloc keys (tau/no-tau), and one circuit
-    # key per distinct (kind, discipline, backend, alloc) combination.
-    assert len(cache) == 7
+    # ensemble fingerprint + shared EnsembleBatch + one order key (lp),
+    # two alloc keys (tau/no-tau), and one circuit key per distinct
+    # (kind, discipline, backend, alloc) combination.
+    assert len(cache) == 9
+    from repro.pipeline.pipeline import _ENSEMBLE_KEY, _FINGERPRINT_KEY
+
+    assert _FINGERPRINT_KEY in cache and _ENSEMBLE_KEY in cache
     for s, results in by_scheme.items():
         for inst, sol, got in zip(instances, sols, results):
             ref = scheduler._legacy_run(inst, s, lp_solution=sol)
