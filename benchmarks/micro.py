@@ -13,7 +13,15 @@ uploaded perf-trajectory artifact.  ``--sharded-smoke`` runs the
 data-axis-sharded sweep (``sweep(mesh=make_local_mesh())``) against the
 single-device run, asserts bit-identical rows, and merges
 ``sharded_sweep_speedup_x`` into the same artifact (CI forces
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for it)."""
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for it).
+
+``--engines`` times the three circuit-calendar executors (wide / jax /
+kernel) on one shared ensemble with bit-parity asserted, reports each
+XLA engine's roofline distance (`repro.launch.perf.measured_roofline`),
+and with ``--trajectory`` appends a timestamped snapshot to the
+repo-tracked ``BENCH_micro.json``.  ``--check-floors`` gates the current
+``results/benchmarks/micro.json`` against ``benchmarks/floors.json``
+(exit 1 on any speedup below its floor) — the CI regression gate."""
 
 from __future__ import annotations
 
@@ -186,6 +194,179 @@ def bench_pipeline_batch(
     }
 
 
+def bench_circuit_engines(quick=False, ensemble_size=24, lp_iters=200):
+    """Per-engine circuit-calendar timings on one shared ensemble.
+
+    Runs the same (instances, allocs, orders) through `schedule_batch`
+    under every engine — ``"wide"`` (lockstep NumPy pair calendar),
+    ``"jax"`` (vmapped flow-space while_loop) and ``"kernel"`` (lockstep
+    pair-space calendar with the Pallas round reduction) — asserting all
+    three produce bit-identical establishment times and CCTs, and times
+    each cold (first call in this function) and warm.
+
+    For the two XLA engines the compiled calendar is also pushed through
+    `lower_calendar` -> `repro.launch.hlo_cost` -> roofline to report how
+    far the measured warm time sits from the cost model's hardware bound
+    (``*_roofline_frac``; the measured time includes host packing, so
+    this is a floor on the achieved fraction).  Device/backend metadata
+    rides along so `BENCH_micro.json` trajectory entries are
+    interpretable across machines.
+    """
+    from repro.experiments import solve_ensemble_lp
+    from repro.launch.perf import measured_roofline
+    from repro.pipeline.batch_circuit import (
+        lower_calendar,
+        member_tables,
+        schedule_batch,
+    )
+
+    B = 8 if quick else ensemble_size
+    rng = np.random.default_rng(3)
+    ens = [
+        random_instance(
+            num_coflows=int(rng.integers(20, 52)),
+            num_ports=int(rng.integers(4, 12)),
+            num_cores=int(rng.integers(2, 5)),
+            seed=300 + s,
+        )
+        for s in range(B)
+    ]
+    sols = solve_ensemble_lp(
+        ens, iters=100 if quick else lp_iters, m_quantum=None, p_quantum=None
+    )
+    pipe = get_pipeline("ours")
+    discipline = pipe.circuit_stage.discipline
+    orders = [sol.order() for sol in sols]
+    allocs = pipe.allocate_stage.allocate_batch(ens, orders)
+
+    stats = {
+        "engines_B": B,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "num_devices": len(jax.devices()),
+        "jax_version": jax.__version__,
+    }
+    results = {}
+    for engine in ("wide", "jax", "kernel"):
+        t0 = time.perf_counter()
+        pairs = schedule_batch(ens, allocs, orders, discipline, engine=engine)
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        pairs = schedule_batch(ens, allocs, orders, discipline, engine=engine)
+        t_warm = time.perf_counter() - t0
+        results[engine] = pairs
+        stats[f"circuit_{engine}_cold_ensemble{B}_s"] = t_cold
+        stats[f"circuit_{engine}_warm_ensemble{B}_s"] = t_warm
+
+    ref = results["wide"]
+    for engine in ("jax", "kernel"):
+        for (scheds, ccts), (rscheds, rccts) in zip(results[engine], ref):
+            if not np.array_equal(ccts, rccts):
+                raise AssertionError(f"engine {engine!r} CCTs != wide oracle")
+            for s, r in zip(scheds, rscheds):
+                if not (
+                    np.array_equal(s.establish, r.establish)
+                    and np.array_equal(s.complete, r.complete)
+                ):
+                    raise AssertionError(
+                        f"engine {engine!r} schedules != wide oracle"
+                    )
+    base = stats[f"circuit_wide_warm_ensemble{B}_s"]
+    for engine in ("jax", "kernel"):
+        stats[f"circuit_{engine}_vs_wide_warm_x"] = (
+            base / stats[f"circuit_{engine}_warm_ensemble{B}_s"]
+        )
+
+    # Roofline distance of the two XLA calendars (the "wide" engine is
+    # host NumPy: no HLO exists for it, by design).
+    tabs = [
+        tab
+        for inst, alloc, order in zip(ens, allocs, orders)
+        for tab in member_tables(inst, alloc, order)
+        if tab["coflow"].shape[0]
+    ]
+    nmax = max(inst.num_ports for inst in ens)
+    for engine in ("jax", "kernel"):
+        hlo = (
+            lower_calendar(tabs, nmax, discipline, engine=engine)
+            .compile()
+            .as_text()
+        )
+        terms = measured_roofline(
+            hlo, stats[f"circuit_{engine}_warm_ensemble{B}_s"]
+        )
+        stats[f"circuit_{engine}_roofline_bound_s"] = terms["bound_s"]
+        stats[f"circuit_{engine}_roofline_frac"] = terms["roofline_frac"]
+        stats[f"circuit_{engine}_roofline_dominant"] = terms["dominant"]
+    return stats
+
+
+def record_trajectory(stats, path=None):
+    """Append one entry to the repo-tracked ``BENCH_micro.json``.
+
+    Unlike ``results/benchmarks/micro.json`` (gitignored, per-run), the
+    trajectory file is committed: each entry is a timestamped snapshot of
+    the engine timings plus the backend metadata that makes numbers from
+    different machines comparable, so perf history survives in review.
+    """
+    import json
+    import os
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..", "BENCH_micro.json")
+    path = os.path.abspath(path)
+    doc = {"schema": "bench-micro-trajectory-v1", "entries": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["entries"].append(
+        {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "stats": {
+                k: (float(f"{v:.6g}") if isinstance(v, float) else v)
+                for k, v in stats.items()
+            },
+        }
+    )
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def check_floors(floors_path=None):
+    """Benchmark-regression gate: compare the current run's
+    ``results/benchmarks/micro.json`` against ``benchmarks/floors.json``.
+
+    Every key in the floors file must be present in the results and meet
+    its floor (all floors are lower bounds on speedup ratios).  Returns
+    the list of failure strings — empty means pass; the CLI exits
+    nonzero on any failure so CI can gate on it.
+    """
+    import json
+    import os
+
+    from benchmarks.common import results_dir
+
+    if floors_path is None:
+        floors_path = os.path.join(os.path.dirname(__file__), "floors.json")
+    with open(floors_path) as f:
+        floors = json.load(f)
+    res_path = os.path.join(results_dir(), "micro.json")
+    if not os.path.exists(res_path):
+        return [f"no results at {res_path}: run the benchmark first"]
+    with open(res_path) as f:
+        results = json.load(f)
+    failures = []
+    for key, floor in floors.items():
+        got = results.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from {res_path} (floor {floor})")
+        elif got < floor:
+            failures.append(f"{key}: {got:.3f} below floor {floor}")
+    return failures
+
+
 def run(quick=False):
     rows = []
     inst = paper_default_instance(seed=0)
@@ -218,6 +399,13 @@ def run(quick=False):
     stats = bench_pipeline_batch(quick=quick)
     stats.pop("B")
     rows.extend(stats.items())
+
+    # Per-engine circuit calendars (wide / jax / kernel) with roofline
+    # distance for the XLA engines.
+    estats = bench_circuit_engines(quick=quick)
+    rows.extend(
+        (k, v) for k, v in estats.items() if isinstance(v, (int, float))
+    )
 
     # Sharded-ensemble sweep vs single device (data-axis NamedSharding;
     # 1-device meshes still exercise the sharded code path).
@@ -277,6 +465,29 @@ def batch_smoke(quick=False):
     for name, val in stats.items():
         print(f"micro,{name},{val:.4f}")
     _merge_micro_json(stats)
+    return stats
+
+
+def engines_smoke(quick=False, trajectory=False):
+    """CI smoke: all three circuit engines, bit-parity asserted.
+
+    Prints each engine's cold/warm timings plus the roofline fractions,
+    merges them into ``results/benchmarks/micro.json`` (the per-run CI
+    artifact) and — with ``trajectory=True`` — appends a timestamped
+    entry to the repo-tracked ``BENCH_micro.json``.
+    """
+    stats = bench_circuit_engines(quick=quick)
+    for name, val in stats.items():
+        if isinstance(val, float):
+            print(f"micro,{name},{val:.6g}")
+        else:
+            print(f"micro,{name},{val}")
+    _merge_micro_json(
+        {k: v for k, v in stats.items() if isinstance(v, (int, float))}
+    )
+    if trajectory:
+        path = record_trajectory(stats)
+        print(f"trajectory appended to {path}")
     return stats
 
 
@@ -399,10 +610,40 @@ if __name__ == "__main__":
         "single-device run; bit-identical rows asserted, "
         "sharded_sweep_speedup_x merged into micro.json)",
     )
+    ap.add_argument(
+        "--engines",
+        action="store_true",
+        help="run only the per-engine circuit-calendar case (wide/jax/"
+        "kernel timed on one ensemble, bit-parity asserted, roofline "
+        "fractions merged into micro.json)",
+    )
+    ap.add_argument(
+        "--trajectory",
+        action="store_true",
+        help="with --engines: also append a timestamped entry to the "
+        "repo-tracked BENCH_micro.json",
+    )
+    ap.add_argument(
+        "--check-floors",
+        action="store_true",
+        help="compare results/benchmarks/micro.json against "
+        "benchmarks/floors.json and exit nonzero on any regression",
+    )
     args = ap.parse_args()
-    if args.batch_smoke:
+    if args.check_floors:
+        import sys
+
+        failures = check_floors()
+        for f in failures:
+            print(f"FLOOR REGRESSION: {f}")
+        if failures:
+            sys.exit(1)
+        print("floors: all pass")
+    elif args.batch_smoke:
         batch_smoke(quick=args.quick)
     elif args.sharded_smoke:
         sharded_smoke(quick=args.quick)
+    elif args.engines:
+        engines_smoke(quick=args.quick, trajectory=args.trajectory)
     else:
         main(quick=args.quick)

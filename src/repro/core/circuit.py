@@ -36,7 +36,14 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["CoreSchedule", "schedule_core", "resolve_event", "NOT_SCHEDULED"]
+__all__ = [
+    "CoreSchedule",
+    "schedule_core",
+    "resolve_event",
+    "resolve_event_pairs",
+    "pair_heads",
+    "NOT_SCHEDULED",
+]
 
 NOT_SCHEDULED = -1.0
 
@@ -88,6 +95,55 @@ def resolve_event(
     first_out = np.full(free_out.shape[0], F, dtype=np.int64)
     np.minimum.at(first_out, dst, claim_idx)
     return idle & (ar == first_in[src]) & (ar == first_out[dst])
+
+
+def pair_heads(
+    src: np.ndarray,
+    dst: np.ndarray,
+    waiting: np.ndarray,
+    num_ports: int,
+) -> np.ndarray:
+    """First waiting flow per (ingress, egress) pair — the pair-space claim.
+
+    Flows sharing one (src, dst) pair contend for *both* ports, so they
+    execute strictly sequentially and only each pair's head (its first
+    waiting flow in priority order) can ever claim or start.  Returns the
+    (N, N) matrix of head flow indices, with ``F`` as the empty-pair
+    sentinel — the claim input of `resolve_event_pairs`, and the state the
+    accelerated calendars (`repro.pipeline.batch_circuit`'s "wide" and
+    "kernel" engines) maintain instead of per-flow claims.
+    """
+    F = src.shape[0]
+    heads = np.full((num_ports, num_ports), F, dtype=np.int64)
+    idx = np.nonzero(waiting)[0]
+    np.minimum.at(heads, (src[idx], dst[idx]), idx)
+    return heads
+
+
+def resolve_event_pairs(
+    claim: np.ndarray, idle: np.ndarray
+) -> np.ndarray:
+    """One resolution round in pair space: the (N, N) start mask.
+
+    ``claim[i, j]`` is pair (i, j)'s claiming head flow id (``F``-or-more
+    where no head claims — reserving rounds claim every waiting head,
+    greedy rounds only idle ones); ``idle[i, j]`` whether the pair may
+    start now (head waiting, both ports free — port freeness is uniform
+    across a pair's flows, so idleness is a per-pair property).  A pair
+    starts iff it is idle and its claim is minimal along its row (the
+    first claimer on ingress i) and its column (the first claimer on
+    egress j).
+
+    This is `resolve_event`'s first-claimer-per-port pass exactly — the
+    per-port minimum over flows equals the minimum over that port's pair
+    heads — reduced from O(F) flows to O(N^2) pairs per round.  It is the
+    NumPy twin of `repro.kernels.event_resolve.pair_resolve` (the Pallas
+    round reduction of the ``engine="kernel"`` batched calendar); parity
+    of all three is asserted in `tests/test_kernels.py`.
+    """
+    rowmin = claim.min(axis=1, keepdims=True)
+    colmin = claim.min(axis=0, keepdims=True)
+    return idle & (claim == rowmin) & (claim == colmin)
 
 
 @dataclasses.dataclass

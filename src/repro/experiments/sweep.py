@@ -127,6 +127,7 @@ def sweep(
     discipline: str = "greedy",
     alloc: str = "batch",
     circuit: str = "batch",
+    circuit_engine: str = "auto",
     certify: bool = False,
     metas: Sequence[Mapping[str, Any]] | None = None,
     validate: bool = True,
@@ -144,7 +145,10 @@ def sweep(
     the batched path — ``"batch"`` (the `batch_circuit` padded event
     calendar) or ``"loop"`` (the per-instance oracle inside `run_batch`);
     with ``alloc="loop"`` the whole pipeline is already per-instance, so
-    ``circuit`` has no effect there.
+    ``circuit`` has no effect there.  ``circuit_engine`` picks the
+    batched calendar's executor (``"kernel"``/``"jax"``/``"wide"``;
+    default ``"auto"``, overridable via ``REPRO_CIRCUIT_ENGINE`` — see
+    `repro.pipeline.batch_circuit`).
 
     ``mesh`` shards the ensemble axis of every batched stage over the
     mesh's ``data`` axis (`jax.sharding.NamedSharding` via
@@ -194,7 +198,8 @@ def sweep(
 
     pipes = {
         s: pipeline_mod.get_pipeline(
-            s, discipline=discipline, circuit_backend=circuit
+            s, discipline=discipline, circuit_backend=circuit,
+            circuit_engine=circuit_engine,
         )
         for s in schemes
     }
@@ -246,12 +251,14 @@ def sweep(
         if ours_results is None:
             ours_results = _rerun(
                 pipeline_mod.get_pipeline(
-                    "ours", discipline=discipline, circuit_backend=circuit
+                    "ours", discipline=discipline, circuit_backend=circuit,
+                    circuit_engine=circuit_engine,
                 )
             )
         reserving_results = _rerun(
             pipeline_mod.get_pipeline(
-                "ours", discipline="reserving", circuit_backend=circuit
+                "ours", discipline="reserving", circuit_backend=circuit,
+                circuit_engine=circuit_engine,
             )
         )
     records = []

@@ -1,3 +1,15 @@
-from repro.kernels.event_resolve.ops import event_resolve, event_resolve_ref
+from repro.kernels.event_resolve.ops import (
+    EventResolveArgumentError,
+    event_resolve,
+    event_resolve_ref,
+    pair_resolve,
+    pair_resolve_ref,
+)
 
-__all__ = ["event_resolve", "event_resolve_ref"]
+__all__ = [
+    "EventResolveArgumentError",
+    "event_resolve",
+    "event_resolve_ref",
+    "pair_resolve",
+    "pair_resolve_ref",
+]

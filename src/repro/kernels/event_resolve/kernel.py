@@ -18,11 +18,26 @@ Grid: one program per member; each member's blocks are read from HBM
 exactly once.  Validated against the jnp oracle (`ref.py`) in interpret
 mode on CPU (`tests/test_kernels.py`).
 
-This kernel is an f32 building block, not yet wired into the batched
-calendar (whose bit-parity contract is f64): the scheduler's `while_loop`
-keeps its fused jnp round, and the kernel stands ready for the TPU
-profiling pass that decides whether an f32 in-round reduction (with an
-f64 fix-up) pays for itself — see ROADMAP.
+Two kernels share this file:
+
+  * `event_resolve_pallas` — the flow-space f32 prototype above, kept as
+    an oracle-validated building block (each round scans O(F) flows and
+    the (F, F) triangle matmul grows quadratically in flows);
+  * `pair_resolve_pallas` — the production round reduction of the
+    ``engine="kernel"`` batched calendar
+    (`repro.pipeline.batch_circuit._run_calendar_pairs`): the wide CPU
+    engine's per-(ingress, egress)-pair head-pointer layout, so one round
+    reduces an (N, N) pair matrix instead of F flows.
+
+The pair kernel's f64 story is *separation*, not emulation: CCT
+bit-parity is the repo's correctness contract and every f64 time
+comparison (release <= t, port-free <= t, the claim/idle masks) happens
+outside the kernel as exact jnp f64 selections.  The kernel itself only
+reduces small integer flow ids (min along rows and columns) carried in
+f32 lanes — exact for ids < 2**24, which the calendar guards — so its
+output is bit-identical to the f64 oracle by construction; no f64 tiles
+or split-hi/lo arithmetic are needed.  Parity with the f64 flow-space
+oracle is property-tested in `tests/test_kernels.py` (interpret mode).
 """
 
 from __future__ import annotations
@@ -33,7 +48,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.common import LANE, pad_to, use_interpret
+from repro.kernels.common import LANE, SUBLANE, pad_to, use_interpret
+
+# Pad value for claim matrices: larger than any real flow id or the F
+# sentinel (ids stay < 2**24), exactly representable in f32.
+_CLAIM_PAD = float(1 << 30)
 
 
 def _event_resolve_kernel(
@@ -112,3 +131,54 @@ def event_resolve_pallas(
         name="event_resolve",
     )(src_p, dst_p, rel_p, mask_p, fin_p, fout_p, t[:, None].astype(jnp.float32))
     return start[:, :F, 0]
+
+
+def _pair_resolve_kernel(claim_ref, idle_ref, start_ref):
+    claim = claim_ref[0]  # (Ns, Nl) f32: head flow id per pair, or sentinel
+    idle = idle_ref[0]
+    rowmin = jnp.min(claim, axis=1, keepdims=True)  # first claimer per ingress
+    colmin = jnp.min(claim, axis=0, keepdims=True)  # first claimer per egress
+    start_ref[0] = (
+        idle
+        * (claim == rowmin).astype(jnp.float32)
+        * (claim == colmin).astype(jnp.float32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pair_resolve_pallas(
+    claim: jnp.ndarray,
+    idle: jnp.ndarray,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(G, N, N) f32 pair claims + idle mask -> (G, N, N) f32 start mask.
+
+    ``claim[g, i, j]`` is the claiming head flow id of pair (ingress i,
+    egress j) — or any value >= the F sentinel where no head claims; flow
+    ids are unique per member, so a pair starts iff it is idle and its
+    claim equals both its row minimum and its column minimum.  Padded
+    rows/columns carry ``idle == 0`` and a claim above every real id, so
+    they neither start nor disturb any minimum.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    G, N, _ = claim.shape
+    claim_p, _ = pad_to(claim.astype(jnp.float32), 1, SUBLANE, value=_CLAIM_PAD)
+    claim_p, _ = pad_to(claim_p, 2, LANE, value=_CLAIM_PAD)
+    idle_p, _ = pad_to(idle.astype(jnp.float32), 1, SUBLANE)
+    idle_p, _ = pad_to(idle_p, 2, LANE)
+    n_sub, n_lane = claim_p.shape[1], claim_p.shape[2]
+
+    start = pl.pallas_call(
+        _pair_resolve_kernel,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((1, n_sub, n_lane), lambda g: (g, 0, 0)),
+            pl.BlockSpec((1, n_sub, n_lane), lambda g: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_sub, n_lane), lambda g: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, n_sub, n_lane), jnp.float32),
+        interpret=interpret,
+        name="pair_resolve",
+    )(claim_p, idle_p)
+    return start[:, :N, :N]

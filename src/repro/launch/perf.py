@@ -1,9 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
-
 """Perf-iteration driver for the roofline hillclimb.
 
 Runs one (arch x shape) cell with config/step overrides and prints the
@@ -12,14 +6,55 @@ hypothesis -> change -> measure cycle is one command:
 
   python -m repro.launch.perf --arch xlstm-1.3b --shape prefill_32k \
       --override mlstm_chunk=1024 --tag chunk1024
+
+Also home of `measured_roofline`: the HLO-text -> roofline-distance
+bridge the micro benchmarks use to report how far a measured wall time
+sits from the cost model's hardware bound (`repro.launch.hlo_cost` for
+the static counts, `repro.launch.roofline` for the bound).
 """
 
 import argparse
 import json
+import os
 from pathlib import Path
+
+__all__ = ["measured_roofline", "main"]
+
+
+def measured_roofline(hlo_text: str, measured_s: float, hw=None) -> dict:
+    """Roofline terms + achieved fraction for one compiled program.
+
+    ``hlo_text`` is the post-compile HLO (``lowered.compile().as_text()``);
+    ``measured_s`` the measured wall time of one execution.  Returns the
+    `roofline_terms` dict extended with the static counts and
+    ``roofline_frac = bound_s / measured_s`` (1.0 == at the hardware
+    roofline; tiny values == latency/overhead bound).
+    """
+    from repro.launch import hlo_cost, roofline
+
+    cost = hlo_cost.analyze(hlo_text)
+    terms = roofline.roofline_terms(
+        cost.flops, cost.bytes, cost.collective_total,
+        hw=hw if hw is not None else roofline.HW,
+    )
+    terms["flops"] = cost.flops
+    terms["bytes"] = cost.bytes
+    terms["collective_bytes"] = cost.collective_total
+    terms["measured_s"] = measured_s
+    terms["roofline_frac"] = roofline.roofline_fraction(
+        terms["bound_s"], measured_s
+    )
+    return terms
 
 
 def main():
+    # Host-device fanout must be set before the first jax import; keep the
+    # mutation inside main() so merely importing this module (e.g. for
+    # `measured_roofline`) never rewrites the process environment.
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)

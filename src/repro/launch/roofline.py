@@ -20,7 +20,14 @@ from __future__ import annotations
 import dataclasses
 import re
 
-__all__ = ["HW", "Hardware", "collective_bytes", "roofline_terms", "model_flops"]
+__all__ = [
+    "HW",
+    "Hardware",
+    "collective_bytes",
+    "roofline_terms",
+    "roofline_fraction",
+    "model_flops",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +102,16 @@ def roofline_terms(
     terms["dominant"] = dominant
     terms["bound_s"] = total
     return terms
+
+
+def roofline_fraction(bound_s: float, measured_s: float) -> float:
+    """Achieved fraction of the roofline bound: 1.0 means the measured
+    time equals the model's hardware limit; small values mean the program
+    sits far under the roofline (overhead/latency bound, as a serial
+    event calendar on a host CPU is).  0.0 when nothing was measured."""
+    if measured_s <= 0:
+        return 0.0
+    return bound_s / measured_s
 
 
 def model_flops(cfg, shape) -> float:

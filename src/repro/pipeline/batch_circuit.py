@@ -8,10 +8,23 @@ port-free time.  After PR 3 batched allocation, this per-(instance, core)
 loop became the dominant post-LP cost of every figure sweep.
 
 Here the identical event calendar executes for the whole flattened
-(ensemble x core) axis at once, through one of two bit-identical
-executors behind `schedule_batch` (selected like the Pallas kernels
-select interpret mode: the JAX program on accelerators, the lockstep
-NumPy pair engine `_run_calendar_wide` on hosts).  In the JAX executor,
+(ensemble x core) axis at once, through one of three bit-identical
+executors behind `schedule_batch`:
+
+  * ``"kernel"`` — the accelerator path: ONE lockstep `lax.while_loop`
+    over the whole (G, ...) batch whose fused round (claim -> start ->
+    clock advance, a single dispatch per round with donated calendar
+    buffers) reduces the wide engine's per-(ingress, egress)-pair
+    head-pointer layout; the per-round reduction is the
+    `repro.kernels.event_resolve.pair_resolve` Pallas kernel on native
+    TPU (the jnp pair oracle elsewhere, warned once).  A round scans
+    O(N^2) active pairs instead of O(F) flows.
+  * ``"jax"`` — the vmapped per-member `lax.while_loop` in flow space
+    (`_run_calendar`), kept as the segment-min reference program;
+  * ``"wide"`` — the lockstep NumPy pair engine (`_run_calendar_wide`),
+    the CPU path.
+
+In the JAX executor,
 each member g is one (instance, core) pair with its flows padded to a
 shared length Fmax and its ports to Nmax; one bounded
 `jax.lax.while_loop` (vmapped across members) carries
@@ -69,6 +82,8 @@ bucket instead of recompiling per call.
 from __future__ import annotations
 
 import functools
+import os
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -88,7 +103,17 @@ __all__ = [
     "schedule_batch_arrays",
     "member_tables",
     "event_bound",
+    "lower_calendar",
 ]
+
+#: Calendar executors selectable via ``engine=`` (plus ``"auto"``).
+_ENGINES = ("jax", "wide", "kernel")
+
+#: Test hook: force the Pallas pair kernel on (True, interpret mode off
+#: TPU) or off (False) regardless of backend; None follows the backend.
+_PAIR_KERNEL_OVERRIDE: bool | None = None
+
+_KERNEL_FALLBACK_WARNED = False
 
 # Bucket quanta: flows, ports and members round up to these so that
 # near-shaped ensembles (e.g. the same sweep under both disciplines, or
@@ -277,6 +302,152 @@ def _run_calendar(
         src, dst, rel, dur, pending0, free0,
         psrc, soff, send, sempty, pdst, doff, dend, dempty,
     )
+
+
+def _run_calendar_pairs_impl(
+    src, dst, rel, dur, pending0, free0, pairid, pperm, poffs, psend, psempty,
+    reserving, bound, use_kernel,
+):
+    """The ``engine="kernel"`` executor: one lockstep pair-space calendar.
+
+    The wide CPU engine's per-(ingress, egress)-pair head-pointer trick,
+    ported to the JAX path: flows of one pair share both ports, execute
+    sequentially, and only each pair's head (first waiting flow) can ever
+    claim or start — so the whole batch advances through ONE
+    `lax.while_loop` whose round body is a single fused dispatch (claim
+    -> `pair_resolve` -> start/complete writes -> clock advance) over
+    (G, P = Nmax^2) pair state instead of a vmap of per-member loops over
+    (Fmax,) flow state.
+
+    Heads are stateless: each round recomputes every pair's first waiting
+    flow as an exclusive segment-min over the pair-sorted flow axis (the
+    same presorted-`cummin` scheme `_run_calendar` uses per port, with
+    pairs as segments), which eliminates the wide engine's head-rewind
+    bookkeeping at release crossings.  The per-round reduction — idle &
+    row-first & col-first over the (G, N, N) claim matrix — is the
+    `repro.kernels.event_resolve.pair_resolve` Pallas kernel when
+    ``use_kernel`` (native TPU), else its jnp oracle; both reduce exact
+    integer ids, so either way every f64 comparison stays in exact jnp
+    selections and CCTs remain bit-identical to `schedule_core`.
+
+    Shapes: src/dst/pairid/pperm/poffs (G, Fmax) i32 (``pairid`` holds
+    ``src * Nmax + dst``, P for padded flows), rel/dur (G, Fmax) f64,
+    pending0 (G, Fmax) bool, free0 (G, Nmax) f64 zeros, psend/psempty
+    (G, P).  Returns (establish, complete, unfinished, stalled) exactly
+    like `_run_calendar`.
+    """
+    from repro.kernels.event_resolve import pair_resolve
+
+    G, F = src.shape
+    N = free0.shape[1]
+    P = N * N
+    ar = jnp.arange(F, dtype=jnp.int32)
+    arp = jnp.arange(P, dtype=jnp.int32)
+    pair_off = ((P - arp) * (F + 1)).astype(jnp.int32)
+    PI = arp // N  # static pair -> ingress port
+    PJ = arp % N  # static pair -> egress port
+    pairc = jnp.clip(pairid, 0, P - 1)
+
+    def cond(carry):
+        _, _, _, _, pending, _, it, stalled = carry
+        return jnp.any(pending & ~stalled[:, None]) & (it < bound)
+
+    def body(carry):
+        free_in, free_out, est, comp, pending, t, it, stalled = carry
+        t_ = t[:, None]
+        waiting = pending & (rel <= t_) & ~stalled[:, None]
+        # Pair heads: exclusive segment-min of waiting flow ids over the
+        # pair-sorted flow axis (descending per-segment offsets keep the
+        # running cummin from leaking across pair boundaries).
+        w = jnp.where(jnp.take_along_axis(waiting, pperm, 1), pperm, F) + poffs
+        cm = jax.lax.cummin(w, axis=1)
+        cand = jnp.where(
+            psempty, F, jnp.take_along_axis(cm, psend, 1) - pair_off[None, :]
+        )
+        candc = jnp.clip(cand, 0, F - 1)
+        has = cand < F
+        idle = (
+            has
+            & (jnp.take(free_in, PI, axis=1) <= t_)
+            & (jnp.take(free_out, PJ, axis=1) <= t_)
+        )
+        claim = has if reserving else idle
+        claimf = jnp.where(claim, cand, F).astype(jnp.float32)
+        startp = pair_resolve(
+            claimf.reshape(G, N, N),
+            idle.reshape(G, N, N),
+            use_kernel=use_kernel,
+        ).reshape(G, P)
+        # Gather back to flow space: a flow starts iff its pair started
+        # and it is that pair's head this round.
+        sflow = jnp.take_along_axis(startp, pairc, 1) & (
+            jnp.take_along_axis(cand, pairc, 1) == ar[None, :]
+        )
+        est = jnp.where(sflow, t_, est)
+        comp = jnp.where(sflow, t_ + dur, comp)
+        pending = pending & ~sflow
+        # Port frees via (G, N, N) row/column max reductions — at most one
+        # pair per row/column starts, so the max picks its completion.
+        dur_p = jnp.take_along_axis(dur, candc, 1)
+        ev = jnp.where(startp, t_ + dur_p, -jnp.inf).reshape(G, N, N)
+        sm = startp.reshape(G, N, N)
+        free_in = jnp.where(sm.any(2), ev.max(2), free_in)
+        free_out = jnp.where(sm.any(1), ev.max(1), free_out)
+        # Advance unless another round at this t is possible: a
+        # zero-duration start chains its pair's next flow, and (greedy) an
+        # idle-but-blocked pair may start once its blocker started.
+        chained = jnp.any(startp & (dur_p == 0.0), axis=1)
+        if reserving:
+            more = chained
+        else:
+            more = chained | jnp.any(idle & ~startp, axis=1)
+        advance = ~more
+        times = jnp.where(
+            pending,
+            jnp.maximum(
+                rel,
+                jnp.maximum(
+                    jnp.take_along_axis(free_in, src, 1),
+                    jnp.take_along_axis(free_out, dst, 1),
+                ),
+            ),
+            jnp.inf,
+        )
+        t_next = jnp.min(jnp.where(times > t_, times, jnp.inf), axis=1)
+        alive = jnp.any(pending, axis=1)
+        stall = advance & alive & jnp.isinf(t_next) & ~stalled
+        t = jnp.where(advance & jnp.isfinite(t_next) & ~stalled, t_next, t)
+        return (
+            free_in, free_out, est, comp, pending, t, it + 1, stalled | stall,
+        )
+
+    init = (
+        free0,
+        free0,
+        jnp.full((G, F), NOT_SCHEDULED, rel.dtype),
+        jnp.full((G, F), NOT_SCHEDULED, rel.dtype),
+        pending0,
+        jnp.min(jnp.where(pending0, rel, jnp.inf), axis=1),
+        jnp.int32(0),
+        jnp.zeros((G,), bool),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    _, _, est, comp, pending, _, _, stalled = out
+    return est, comp, jnp.any(pending, axis=1), stalled
+
+
+_PAIR_STATICS = ("reserving", "bound", "use_kernel")
+_run_calendar_pairs = jax.jit(
+    _run_calendar_pairs_impl, static_argnames=_PAIR_STATICS
+)
+# Donated variant for accelerator backends: the round's big f64 carry
+# buffers alias their inputs so each fused dispatch updates in place (CPU
+# ignores donation with a UserWarning, so it gets the plain jit).
+_run_calendar_pairs_donated = jax.jit(
+    _run_calendar_pairs_impl,
+    static_argnames=_PAIR_STATICS,
+    donate_argnames=("pending0", "free0"),
+)
 
 
 def _run_calendar_wide(
@@ -489,37 +660,62 @@ def _run_calendar_wide(
 
 
 def _check_engine(discipline: str, engine: str) -> str:
+    """Validate and resolve the calendar executor.
+
+    ``"auto"`` resolves from the environment: a ``REPRO_CIRCUIT_ENGINE``
+    variable wins when set (it overrides auto-selection only, never an
+    explicit ``engine=`` argument), otherwise accelerator backends
+    (TPU/GPU) get the kernelized pair calendar and CPU hosts the lockstep
+    NumPy engine — mirroring the kernels' interpret-mode convention.
+    """
     if discipline not in ("reserving", "greedy"):
         raise ValueError(f"unknown discipline {discipline!r}")
-    if engine not in ("auto", "jax", "wide"):
+    if engine not in ("auto",) + _ENGINES:
         raise ValueError(f"unknown engine {engine!r}")
     if engine == "auto":
-        from repro.kernels.common import use_interpret
-
-        engine = "wide" if use_interpret() else "jax"
+        env = os.environ.get("REPRO_CIRCUIT_ENGINE", "").strip().lower()
+        if env:
+            if env not in _ENGINES:
+                raise ValueError(
+                    f"unknown engine {env!r} (from REPRO_CIRCUIT_ENGINE; "
+                    f"expected one of {', '.join(_ENGINES)})"
+                )
+            return env
+        engine = "kernel" if jax.default_backend() in ("tpu", "gpu") else "wide"
     return engine
 
 
-def _execute_members(
-    tabs: Sequence[dict],
-    num_ports_max: int,
-    discipline: str,
-    engine: str,
-    labels: Sequence[str],
-    sharding=None,
-) -> tuple[np.ndarray, np.ndarray]:
-    """Pad per-member flow tables and run the selected calendar executor.
+def _warn_kernel_fallback() -> None:
+    """Warn (once per process) that engine="kernel" runs its round through
+    the jnp pair oracle because the Pallas kernel has no native backend
+    here — silent oracle fallbacks would invalidate any perf claim made
+    off this engine's timings."""
+    global _KERNEL_FALLBACK_WARNED
+    if _KERNEL_FALLBACK_WARNED:
+        return
+    _KERNEL_FALLBACK_WARNED = True
+    warnings.warn(
+        'circuit engine "kernel": the Pallas pair_resolve kernel is not '
+        f"native on backend {jax.default_backend()!r}; the round reduction "
+        "runs through the jnp pair oracle (results identical, timings are "
+        "not kernel timings)",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+
+
+def _pad_members(
+    tabs: Sequence[dict], num_ports_max: int, g_multiple: int = 1
+) -> dict:
+    """Pad per-member flow tables into one (G, Fmax)/(G, Nmax) bucket.
 
     ``tabs`` holds one dict per (instance, core) member with F_k > 0
-    (keys: src/dst/rel/dur as in `member_tables`); returns the (G, Fmax)
-    establishment/completion arrays (G rows >= len(tabs), padding rows
-    garbage).  ``sharding`` places the JAX executor's inputs with a
-    data-axis `NamedSharding` (member rows round up to the shard count);
-    the wide engine is host-side NumPy and ignores it.
+    (keys: src/dst/rel/dur as in `member_tables`).  Padded flows carry
+    ``pending=False`` and the ``Nmax`` sentinel port keys; padding member
+    rows (bucket rounding, plus ``g_multiple`` for shard counts) have no
+    pending flows.
     """
-    G = _round_up(len(tabs), _G_QUANTUM)
-    if sharding is not None and engine == "jax":
-        G = _round_up(G, int(sharding.mesh.shape["data"]))
+    G = _round_up(_round_up(len(tabs), _G_QUANTUM), g_multiple)
     Fmax = _round_up(max(t["src"].shape[0] for t in tabs), _F_QUANTUM)
     Nmax = _round_up(num_ports_max, _N_QUANTUM)
     src = np.zeros((G, Fmax), dtype=np.int32)
@@ -538,29 +734,99 @@ def _execute_members(
         rel[g, :F] = tab["rel"]
         dur[g, :F] = tab["dur"]
         pending[g, :F] = True
+    return dict(
+        src=src, dst=dst, skey=skey, dkey=dkey, rel=rel, dur=dur,
+        pending=pending, G=G, Fmax=Fmax, Nmax=Nmax,
+    )
+
+
+def _calendar_program(pad: dict, discipline: str, engine: str):
+    """Assemble the jitted JAX executor for one padded bucket.
+
+    Returns ``(fn, args, statics)`` with ``args`` host arrays — callers
+    place them (optionally sharded) and invoke ``fn(*args, **statics)``
+    under `enable_x64`, or lower without running via ``fn.lower``.
+    """
+    reserving = discipline == "reserving"
+    src, dst = pad["src"], pad["dst"]
+    G, Fmax, Nmax = pad["G"], pad["Fmax"], pad["Nmax"]
+    free0 = np.zeros((G, Nmax), dtype=np.float64)
+    if engine == "jax":
+        psrc, soff, send, sempty = _port_segments(pad["skey"], Nmax)
+        pdst, doff, dend, dempty = _port_segments(pad["dkey"], Nmax)
+        args = (
+            src, dst, pad["rel"], pad["dur"], pad["pending"], free0,
+            psrc, soff, send, sempty, pdst, doff, dend, dempty,
+        )
+        return _run_calendar, args, dict(
+            reserving=reserving, bound=event_bound(Fmax)
+        )
+    # engine == "kernel": pair-space segments over P = Nmax^2 pair keys.
+    P = Nmax * Nmax
+    pairkey = np.where(
+        pad["pending"], src.astype(np.int64) * Nmax + dst, P
+    )
+    pperm, poffs, psend, psempty = _port_segments(pairkey, P)
+    if _PAIR_KERNEL_OVERRIDE is not None:
+        use_kernel = _PAIR_KERNEL_OVERRIDE
+    else:
+        from repro.kernels.common import use_interpret
+
+        # The claim matrix carries flow ids in f32 lanes: exact below
+        # 2**24, which no realistic bucket approaches.
+        use_kernel = not use_interpret() and Fmax < (1 << 24)
+        if not use_kernel:
+            _warn_kernel_fallback()
+    fn = (
+        _run_calendar_pairs_donated
+        if jax.default_backend() in ("tpu", "gpu")
+        else _run_calendar_pairs
+    )
+    args = (
+        src, dst, pad["rel"], pad["dur"], pad["pending"], free0,
+        pairkey.astype(np.int32), pperm, poffs, psend, psempty,
+    )
+    return fn, args, dict(
+        reserving=reserving, bound=event_bound(Fmax), use_kernel=use_kernel
+    )
+
+
+def _execute_members(
+    tabs: Sequence[dict],
+    num_ports_max: int,
+    discipline: str,
+    engine: str,
+    labels: Sequence[str],
+    sharding=None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad per-member flow tables and run the selected calendar executor.
+
+    Returns the (G, Fmax) establishment/completion arrays (G rows >=
+    len(tabs), padding rows garbage).  ``sharding`` places the JAX
+    executors' inputs with a data-axis `NamedSharding` (member rows round
+    up to the shard count); the wide engine is host-side NumPy and
+    ignores it.
+    """
+    g_multiple = (
+        int(sharding.mesh.shape["data"])
+        if sharding is not None and engine in ("jax", "kernel")
+        else 1
+    )
+    pad = _pad_members(tabs, num_ports_max, g_multiple)
     if engine == "wide":
         return _run_calendar_wide(
-            src, dst, rel, dur, pending, Nmax,
+            pad["src"], pad["dst"], pad["rel"], pad["dur"], pad["pending"],
+            pad["Nmax"],
             reserving=discipline == "reserving",
-            bound=event_bound(Fmax) + Fmax,
+            bound=event_bound(pad["Fmax"]) + pad["Fmax"],
             labels=list(labels),
         )
-    psrc, soff, send, sempty = _port_segments(skey, Nmax)
-    pdst, doff, dend, dempty = _port_segments(dkey, Nmax)
+    fn, args, statics = _calendar_program(pad, discipline, engine)
     with enable_x64():
         from repro.launch.mesh import place
 
-        put = lambda x: place(x, sharding)  # noqa: E731
-        est, comp, unfinished, stalled = _run_calendar(
-            put(src), put(dst), put(rel),
-            put(dur), put(pending),
-            put(np.zeros((G, Nmax), dtype=np.float64)),
-            put(psrc), put(soff),
-            put(send), put(sempty),
-            put(pdst), put(doff),
-            put(dend), put(dempty),
-            reserving=discipline == "reserving",
-            bound=event_bound(Fmax),
+        est, comp, unfinished, stalled = fn(
+            *(place(a, sharding) for a in args), **statics
         )
     est = np.asarray(est)
     comp = np.asarray(comp)
@@ -574,6 +840,33 @@ def _execute_members(
                 f"batched scheduler exceeded the event bound ({label})"
             )
     return est, comp
+
+
+def lower_calendar(
+    tabs: Sequence[dict],
+    num_ports_max: int,
+    discipline: str = "reserving",
+    engine: str = "auto",
+):
+    """Lower (don't run) the calendar program for these member tables.
+
+    Returns the `jax.stages.Lowered` of the selected JAX executor on the
+    padded bucket — `benchmarks/micro.py` compiles it and feeds the
+    optimized HLO text to `repro.launch.hlo_cost` for the roofline
+    report.  The ``"wide"`` engine is host NumPy with no XLA program, so
+    requesting it raises `ValueError`.
+    """
+    engine = _check_engine(discipline, engine)
+    if engine == "wide":
+        raise ValueError(
+            'engine "wide" is host NumPy: no XLA program to lower'
+        )
+    if not tabs:
+        raise ValueError("lower_calendar needs at least one member table")
+    pad = _pad_members(tabs, num_ports_max)
+    fn, args, statics = _calendar_program(pad, discipline, engine)
+    with enable_x64():
+        return fn.lower(*args, **statics)
 
 
 def schedule_batch(
@@ -594,11 +887,13 @@ def schedule_batch(
     `AllocationBatch` pytrees instead of re-extracting member tables from
     instances.
 
-    ``engine`` selects the calendar executor: ``"jax"`` (the vmapped
-    `lax.while_loop`, the accelerator path), ``"wide"`` (the lockstep
-    NumPy pair engine, the CPU path), or ``"auto"`` (wide on hosts
-    without an accelerator, mirroring the kernels' interpret-mode
-    convention).  Both are bit-identical to the oracle and to each other.
+    ``engine`` selects the calendar executor: ``"kernel"`` (the lockstep
+    pair-space calendar with the Pallas `pair_resolve` round reduction —
+    the accelerator path), ``"jax"`` (the vmapped flow-space
+    `lax.while_loop`), ``"wide"`` (the lockstep NumPy pair engine, the
+    CPU path), or ``"auto"`` (kernel on TPU/GPU, wide on hosts;
+    overridable via the ``REPRO_CIRCUIT_ENGINE`` environment variable).
+    All are bit-identical to the oracle and to each other.
     """
     engine = _check_engine(discipline, engine)
     instances = list(instances)

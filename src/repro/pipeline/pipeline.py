@@ -135,6 +135,7 @@ class Pipeline:
         return (
             "circuit", st.kind,
             getattr(st, "discipline", None), getattr(st, "backend", None),
+            getattr(st, "engine", None),
         ) + self._alloc_key()
 
     def run_batch(
@@ -384,10 +385,12 @@ _ORDER_STAGES = {
 }
 
 _CIRCUIT_STAGES = {
-    "list": lambda discipline, backend: st.ListCircuit(discipline, backend),
-    "sequential": lambda discipline, backend: st.SequentialCircuit(),
-    "bvn": lambda discipline, backend: st.BvnCircuit(),
-    "fluid": lambda discipline, backend: st.FluidCircuit(),
+    "list": lambda discipline, backend, engine: st.ListCircuit(
+        discipline, backend, engine
+    ),
+    "sequential": lambda discipline, backend, engine: st.SequentialCircuit(),
+    "bvn": lambda discipline, backend, engine: st.BvnCircuit(),
+    "fluid": lambda discipline, backend, engine: st.FluidCircuit(),
 }
 
 
@@ -398,6 +401,7 @@ def build_pipeline(
     lp_method: str = "exact",
     lp_iters: int = 3000,
     circuit_backend: str = "batch",
+    circuit_engine: str = "auto",
 ) -> Pipeline:
     """Materialize a `SchemeSpec` into an executable `Pipeline`.
 
@@ -406,8 +410,10 @@ def build_pipeline(
     LP-ordering stages that have to solve for themselves.
     ``circuit_backend`` selects the list scheduler's `run_batch` engine:
     ``"batch"`` (default — the whole-ensemble padded event calendar) or
-    ``"loop"`` (per-instance NumPy oracle); stages without a batched form
-    ignore it.
+    ``"loop"`` (per-instance NumPy oracle); ``circuit_engine`` picks the
+    batch backend's calendar executor (``"kernel"``/``"jax"``/``"wide"``,
+    default ``"auto"`` — see `repro.pipeline.batch_circuit`).  Stages
+    without a batched form ignore both.
     """
     try:
         order_stage = _ORDER_STAGES[spec.order](lp_method, lp_iters)
@@ -415,7 +421,7 @@ def build_pipeline(
         raise ValueError(f"unknown order stage kind {spec.order!r}") from None
     try:
         circuit_stage = _CIRCUIT_STAGES[spec.circuit](
-            spec.discipline or discipline, circuit_backend
+            spec.discipline or discipline, circuit_backend, circuit_engine
         )
     except KeyError:
         raise ValueError(

@@ -237,15 +237,28 @@ class ListCircuit:
     mirroring the ``alloc="batch"|"loop"`` convention.  ``schedule_batch``
     returns None under the loop backend so `Pipeline.run_batch` can fall
     back (or error under ``require_batch``).
+
+    ``engine`` selects the batch backend's calendar executor
+    (``"kernel"`` / ``"jax"`` / ``"wide"``; the default ``"auto"``
+    resolves per backend, overridable via ``REPRO_CIRCUIT_ENGINE`` — see
+    `repro.pipeline.batch_circuit`); the loop backend ignores it.
     """
 
     kind = "list"
 
-    def __init__(self, discipline: str = "greedy", backend: str = "batch"):
+    def __init__(
+        self,
+        discipline: str = "greedy",
+        backend: str = "batch",
+        engine: str = "auto",
+    ):
         if backend not in ("batch", "loop"):
             raise ValueError(f"unknown circuit backend {backend!r}")
+        if engine not in ("auto", "jax", "wide", "kernel"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.discipline = discipline
         self.backend = backend
+        self.engine = engine
 
     def schedule(self, instance, alloc, order):
         schedules = _schedule_all_cores(
@@ -259,7 +272,8 @@ class ListCircuit:
         from repro.pipeline.batch_circuit import schedule_batch
 
         return schedule_batch(
-            instances, allocs, orders, discipline=self.discipline
+            instances, allocs, orders,
+            discipline=self.discipline, engine=self.engine,
         )
 
     def schedule_batch_arrays(self, ensemble, alloc_batch):
@@ -271,7 +285,8 @@ class ListCircuit:
         from repro.pipeline.batch_circuit import schedule_batch_arrays
 
         return schedule_batch_arrays(
-            ensemble, alloc_batch, discipline=self.discipline
+            ensemble, alloc_batch,
+            discipline=self.discipline, engine=self.engine,
         )
 
 

@@ -59,11 +59,15 @@ def _batch_vs_loop(instances, discipline, engine="auto"):
         validate_schedule(inst, schedules)
 
 
-# Both calendar executors are oracle-checked: the lockstep NumPy pair
-# engine ("wide", the CPU path) on the full seed grid, the vmapped
-# `lax.while_loop` ("jax", the accelerator path) on a compile-friendly
-# subset.
-FUZZ_CASES = [(s, "wide") for s in range(6)] + [(s, "jax") for s in range(2)]
+# All three calendar executors are oracle-checked: the lockstep NumPy
+# pair engine ("wide", the CPU path) on the full seed grid, and the two
+# XLA engines — the vmapped flow-space `lax.while_loop` ("jax") and the
+# lockstep pair-space calendar ("kernel") — on compile-friendly subsets.
+FUZZ_CASES = (
+    [(s, "wide") for s in range(6)]
+    + [(s, "jax") for s in range(2)]
+    + [(s, "kernel") for s in range(2)]
+)
 
 
 @pytest.mark.parametrize("discipline", DISCIPLINES)
@@ -87,7 +91,7 @@ def test_fuzz_mixed_shapes_and_releases(discipline, seed, engine):
     _batch_vs_loop(instances, discipline, engine)
 
 
-@pytest.mark.parametrize("engine", ["wide", "jax"])
+@pytest.mark.parametrize("engine", ["wide", "jax", "kernel"])
 @pytest.mark.parametrize("discipline", DISCIPLINES)
 def test_single_flow_and_empty_cores(discipline, engine):
     """F=1 instances on K=3 cores: two cores stay empty, and the empty
@@ -123,7 +127,7 @@ def _raw_alloc(coflow, src, dst, size, core, K, N):
     )
 
 
-@pytest.mark.parametrize("engine", ["wide", "jax"])
+@pytest.mark.parametrize("engine", ["wide", "jax", "kernel"])
 @pytest.mark.parametrize("discipline", DISCIPLINES)
 def test_zero_duration_flows(discipline, engine):
     """size=0 + delta=0 subflows (dur == 0) chain same-port starts at one
@@ -257,3 +261,98 @@ def test_not_scheduled_guard_regression():
     cs.establish[1] = 0.5
     out = cs.cct_per_coflow(2)
     assert np.array_equal(out, [1.5, 3.0])
+
+
+# ------------------------------------------------- engine selection
+def test_check_engine_auto_env_and_explicit(monkeypatch):
+    """"auto" resolves per backend (kernel on TPU/GPU, wide on hosts);
+    REPRO_CIRCUIT_ENGINE overrides auto-selection only, never an explicit
+    engine= argument; junk in the variable is a loud error."""
+    from repro.pipeline import batch_circuit as bc
+
+    monkeypatch.delenv("REPRO_CIRCUIT_ENGINE", raising=False)
+    for backend, want in (("cpu", "wide"), ("tpu", "kernel"), ("gpu", "kernel")):
+        monkeypatch.setattr(bc.jax, "default_backend", lambda b=backend: b)
+        assert bc._check_engine("greedy", "auto") == want
+    monkeypatch.setenv("REPRO_CIRCUIT_ENGINE", " JAX ")
+    assert bc._check_engine("greedy", "auto") == "jax"
+    # explicit engine= wins over the environment
+    assert bc._check_engine("greedy", "wide") == "wide"
+    monkeypatch.setenv("REPRO_CIRCUIT_ENGINE", "turbo")
+    with pytest.raises(ValueError, match="REPRO_CIRCUIT_ENGINE"):
+        bc._check_engine("greedy", "auto")
+    assert bc._check_engine("greedy", "kernel") == "kernel"
+
+
+def test_kernel_fallback_warns_once(monkeypatch):
+    """On backends without a native Pallas lowering the kernel engine
+    must say (once) that its round runs through the jnp oracle."""
+    import warnings
+
+    from repro.pipeline import batch_circuit as bc
+
+    if bc.jax.default_backend() != "cpu":
+        pytest.skip("fallback only happens on interpret-mode backends")
+    monkeypatch.setattr(bc, "_KERNEL_FALLBACK_WARNED", False)
+    inst = random_instance(num_coflows=3, num_ports=3, num_cores=2, seed=7)
+    order = wspt_order(inst)
+    alloc = allocate(inst, order)
+    with pytest.warns(RuntimeWarning, match="jnp pair oracle"):
+        schedule_batch([inst], [alloc], [order], engine="kernel")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        schedule_batch([inst], [alloc], [order], engine="kernel")
+
+
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_kernel_engine_forced_pallas_parity(discipline, monkeypatch):
+    """The full calendar with the Pallas pair_resolve round forced on
+    (interpret mode on CPU) stays bit-identical to the oracle — the same
+    program that runs compiled on TPU/GPU."""
+    from repro.pipeline import batch_circuit as bc
+
+    monkeypatch.setattr(bc, "_PAIR_KERNEL_OVERRIDE", True)
+    inst = random_instance(
+        num_coflows=4, num_ports=3, num_cores=2, seed=11, release_span=10.0
+    )
+    _batch_vs_loop([inst], discipline, engine="kernel")
+
+
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_run_batch_kernel_engine_parity(discipline, grid_with_lp):
+    """Pipeline.run_batch with circuit_engine="kernel" reproduces the
+    default engine's CCTs and schedules bit for bit."""
+    instances, sols, _, _ = grid_with_lp
+    pipe = pipeline.get_pipeline(
+        "ours", discipline=discipline, circuit_engine="kernel"
+    )
+    ref_pipe = pipeline.get_pipeline("ours", discipline=discipline)
+    batch = pipe.run_batch(instances, lp_solutions=sols, require_batch=True)
+    ref = ref_pipe.run_batch(instances, lp_solutions=sols, require_batch=True)
+    for a, b in zip(batch, ref):
+        assert np.array_equal(a.ccts, b.ccts)
+        _assert_schedules_identical(
+            a.core_schedules, b.core_schedules, "kernel-engine"
+        )
+
+
+def test_lower_calendar_engines():
+    """lower_calendar lowers an XLA program for both JAX engines (the
+    HLO feeds the roofline report) and refuses the host-NumPy engine."""
+    from repro.pipeline.batch_circuit import lower_calendar, member_tables
+
+    inst = random_instance(num_coflows=4, num_ports=3, num_cores=2, seed=3)
+    order = wspt_order(inst)
+    alloc = allocate(inst, order)
+    tabs = [
+        t for t in member_tables(inst, alloc, order) if t["coflow"].shape[0]
+    ]
+    for engine in ("jax", "kernel"):
+        text = lower_calendar(
+            tabs, inst.num_ports, "greedy", engine=engine
+        ).as_text()
+        assert "while" in text
+    with pytest.raises(ValueError, match="no XLA program"):
+        lower_calendar(tabs, inst.num_ports, "greedy", engine="wide")
+    with pytest.raises(ValueError, match="at least one member"):
+        lower_calendar([], inst.num_ports, "greedy", engine="jax")

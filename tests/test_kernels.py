@@ -340,3 +340,126 @@ def test_event_resolve_reserving_semantics():
             )
         )
         assert got.tolist() == [[True, False, False]]
+
+
+# ---------------------------------------------------------------- pair_resolve
+@pytest.mark.parametrize("G,N", [(1, 1), (2, 5), (6, 9), (3, 16)])
+def test_pair_resolve_kernel_matches_ref(G, N):
+    """Pallas pair-space round reduction == jnp oracle across padding."""
+    from repro.kernels.event_resolve import pair_resolve, pair_resolve_ref
+
+    rng = np.random.default_rng(G * 100 + N)
+    F = 40
+    ids = rng.integers(0, F, (G, N, N)).astype(np.float64)
+    claim = jnp.asarray(
+        np.where(rng.random((G, N, N)) < 0.6, ids, float(F)), jnp.float32
+    )
+    idle = jnp.asarray(rng.random((G, N, N)) < 0.5)
+    got = np.asarray(pair_resolve(claim, idle, use_kernel=True))
+    ref = np.asarray(pair_resolve_ref(claim, idle))
+    assert got.dtype == ref.dtype == np.bool_
+    assert np.array_equal(got, ref)
+
+
+@pytest.mark.parametrize("discipline", ["reserving", "greedy"])
+def test_pair_resolve_f64_separation_parity(discipline):
+    """The f64-safety contract of the kernel engine: all f64 comparisons
+    (rel <= t, free <= t) happen outside the kernel, which only reduces
+    exact integer flow ids — so the pair round through `pair_heads` +
+    `pair_resolve` (kernel and oracle) must match the flow-space
+    `resolve_event` f64 reference bit for bit."""
+    from repro.core.circuit import pair_heads, resolve_event
+    from repro.kernels.event_resolve import pair_resolve
+
+    for seed in range(25):
+        rng = np.random.default_rng(seed)
+        F, N = int(rng.integers(1, 40)), int(rng.integers(1, 8))
+        src = rng.integers(0, N, F)
+        dst = rng.integers(0, N, F)
+        # f64 times with sub-ulp-of-f32 structure: parity must not depend
+        # on any f32 rounding of the time comparisons.
+        free_in = rng.uniform(0, 10, N) * (1 + 1e-12)
+        free_out = rng.uniform(0, 10, N) * (1 + 1e-12)
+        waiting = rng.random(F) < 0.7
+        t = float(rng.uniform(0, 10))
+
+        ref = resolve_event(
+            src, dst, free_in, free_out, waiting, t, discipline=discipline
+        )
+        heads = pair_heads(src, dst, waiting, N)
+        has = heads < F
+        idle = has & (free_in[:, None] <= t) & (free_out[None, :] <= t)
+        claiming = has if discipline == "reserving" else idle
+        claim = jnp.asarray(
+            np.where(claiming, heads, F)[None].astype(np.float64),
+            jnp.float32,
+        )
+        for use_kernel in (True, False):
+            sp = np.asarray(
+                pair_resolve(claim, jnp.asarray(idle[None]), use_kernel)
+            )[0]
+            got = sp[src, dst] & (heads[src, dst] == np.arange(F))
+            assert np.array_equal(got, ref), (seed, use_kernel)
+
+
+def test_resolve_event_pairs_matches_flow_space():
+    """NumPy pair-space primitive == flow-space resolve_event (the
+    reduction the wide and kernel calendars both rely on)."""
+    from repro.core.circuit import (
+        pair_heads,
+        resolve_event,
+        resolve_event_pairs,
+    )
+
+    for seed in range(20):
+        rng = np.random.default_rng(1000 + seed)
+        F, N = int(rng.integers(1, 30)), int(rng.integers(1, 7))
+        src = rng.integers(0, N, F)
+        dst = rng.integers(0, N, F)
+        free_in = rng.uniform(0, 5, N)
+        free_out = rng.uniform(0, 5, N)
+        waiting = rng.random(F) < 0.6
+        t = float(rng.uniform(0, 5))
+        for discipline in ("reserving", "greedy"):
+            heads = pair_heads(src, dst, waiting, N)
+            has = heads < F
+            idle = has & (free_in[:, None] <= t) & (free_out[None, :] <= t)
+            claiming = has if discipline == "reserving" else idle
+            sp = resolve_event_pairs(np.where(claiming, heads, F), idle)
+            got = sp[src, dst] & (heads[src, dst] == np.arange(F))
+            ref = resolve_event(
+                src, dst, free_in, free_out, waiting, t,
+                discipline=discipline,
+            )
+            assert np.array_equal(got, ref), (seed, discipline)
+
+
+def test_event_resolve_validation_names_operand():
+    """The ops wrappers reject malformed operands up front with a typed
+    error naming the offending argument (not an XLA shape error later)."""
+    from repro.kernels.event_resolve import (
+        EventResolveArgumentError,
+        event_resolve,
+        pair_resolve,
+    )
+
+    s = _random_event_state(0, 2, 5, 3)
+    with pytest.raises(EventResolveArgumentError, match="src"):
+        event_resolve(**{**s, "src": s["src"].astype(jnp.float32)})
+    with pytest.raises(EventResolveArgumentError, match="pending"):
+        event_resolve(**{**s, "pending": s["pending"].astype(jnp.int32)})
+    with pytest.raises(EventResolveArgumentError, match="free_out"):
+        event_resolve(**{**s, "free_out": s["free_out"][:, :2]})
+    with pytest.raises(EventResolveArgumentError, match="t"):
+        event_resolve(**{**s, "t": s["t"][:1]})
+    with pytest.raises(EventResolveArgumentError, match="rel"):
+        event_resolve(**{**s, "rel": np.asarray(s["rel"])[0]})
+
+    claim = jnp.zeros((2, 3, 3), jnp.float32)
+    idle = jnp.zeros((2, 3, 3), bool)
+    with pytest.raises(EventResolveArgumentError, match="claim"):
+        pair_resolve(claim.astype(jnp.int32), idle)
+    with pytest.raises(EventResolveArgumentError, match="idle"):
+        pair_resolve(claim, idle[:, :2])
+    with pytest.raises(EventResolveArgumentError, match="claim"):
+        pair_resolve(jnp.zeros((2, 3, 4), jnp.float32), idle)
