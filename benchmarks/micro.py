@@ -19,7 +19,12 @@ single-device run, asserts bit-identical rows, and merges
 kernel) on one shared ensemble with bit-parity asserted, reports each
 XLA engine's roofline distance (`repro.launch.perf.measured_roofline`),
 and with ``--trajectory`` appends a timestamped snapshot to the
-repo-tracked ``BENCH_micro.json``.  ``--check-floors`` gates the current
+repo-tracked ``BENCH_micro.json``.  ``--streaming-smoke`` drives the
+online streaming service on a small Poisson-arrival trace: single-batch
+replay parity against the offline pipeline and the (8K+1) bound are
+asserted, and the warm-start re-solve speedup
+(``streaming_resolve_warm_x``) joins the same artifacts.
+``--check-floors`` gates the current
 ``results/benchmarks/micro.json`` against ``benchmarks/floors.json``
 (exit 1 on any speedup below its floor) — the CI regression gate."""
 
@@ -586,6 +591,104 @@ def sharded_smoke(quick=False):
     return stats
 
 
+def bench_streaming(quick=False, lp_iters=1500):
+    """Streaming service: replay parity gate + warm-start re-solve speedup.
+
+    Three checks on one small Poisson-arrival trace:
+
+      1. parity — a single arrival batch with preemption disabled must
+         replay bit-identically to the offline ``Pipeline.run_batch``
+         (same realized weighted CCT, same per-coflow completions);
+      2. bound — every streamed run (warm or cold) must realize weighted
+         CCT within the paper's (8K+1) factor of the exact LP lower
+         bound;
+      3. speedup — ``streaming_resolve_warm_x``: mean per-epoch LP wall
+         time of cold re-solves over warm ones.  Each variant runs twice
+         and only the second pass is measured (compiles amortized); the
+         first epoch of every run is cold by construction, so the mean is
+         taken over re-solve epochs (index >= 1) only.  Warm epochs seed
+         the subgradient with the previous iterate's full precedence
+         matrix and run ``lp_iters_warm = lp_iters // 3`` iterations, so
+         the expected speedup is ~3x minus fixed per-epoch overhead.
+    """
+    from repro.experiments import stream
+    from repro.traffic.arrivals import poisson_arrivals, with_releases
+
+    M = 10 if quick else 16
+    iters = 400 if quick else lp_iters
+    # Mean inter-arrival well under a coflow's CCT so epochs overlap:
+    # warm re-solves need carried-over actives to be warm about.
+    inst = with_releases(
+        random_instance(num_coflows=M, num_ports=6, num_cores=2, seed=9),
+        poisson_arrivals(M, mean_interarrival_ms=4.0, seed=9),
+    )
+
+    # 1. Parity gate: replay == offline, bit-identical.
+    pipe = get_pipeline("ours", discipline="greedy", lp_method="exact")
+    off = pipe.run_batch([inst], lp_solutions=[lp.solve_exact(inst)])[0]
+    rep = stream(inst, lp_method="exact", n_batches=1, preempt=False)
+    if not (
+        np.array_equal(rep.finish, off.ccts)
+        and rep.realized_weighted_cct == off.total_weighted_cct
+    ):
+        raise AssertionError(
+            "single-batch streaming replay diverged from the offline "
+            "Pipeline.run_batch"
+        )
+
+    # 2 + 3. Warm vs cold re-solves on the same 4-batch arrival split.
+    bound = 8.0 * inst.num_cores + 1.0  # releases > 0 on this trace
+    lb = lp.solve_exact(inst).objective
+    kw = dict(lp_method="batch", lp_iters=iters, n_batches=4)
+
+    def timed(warm):
+        stream(inst, warm_start=warm, **kw)  # compile/warmup pass
+        res = stream(inst, warm_start=warm, **kw)
+        if res.realized_weighted_cct > bound * lb * (1 + 1e-9):
+            raise AssertionError(
+                f"streamed run (warm_start={warm}) violated the "
+                f"(8K+1) bound: {res.realized_weighted_cct} > "
+                f"{bound} * {lb}"
+            )
+        resolves = [e.lp_wall_s for e in res.epochs[1:]]
+        return res, sum(resolves) / max(len(resolves), 1)
+
+    cold_res, t_cold = timed(False)
+    warm_res, t_warm = timed(True)
+    if warm_res.warm_resolves < 3:
+        raise AssertionError(
+            f"expected >= 3 warm re-solve epochs, got "
+            f"{warm_res.warm_resolves}"
+        )
+    return {
+        "streaming_epochs": cold_res.num_resolves,
+        "streaming_warm_resolves": warm_res.warm_resolves,
+        "streaming_iteration_savings": warm_res.iteration_savings,
+        "streaming_cold_resolve_s": t_cold,
+        "streaming_warm_resolve_s": t_warm,
+        "streaming_resolve_warm_x": t_cold / t_warm,
+    }
+
+
+def streaming_smoke(quick=False, trajectory=False):
+    """CI smoke for the streaming service.
+
+    Asserts single-batch replay parity against the offline pipeline and
+    the (8K+1) bound on warm and cold streamed runs, then records the
+    warm-start re-solve speedup (``streaming_resolve_warm_x``) into
+    ``results/benchmarks/micro.json``; with ``trajectory=True`` the
+    stats also land in the repo-tracked ``BENCH_micro.json``.
+    """
+    stats = bench_streaming(quick=quick)
+    for name, val in stats.items():
+        print(f"micro,{name},{val:.6g}")
+    _merge_micro_json(stats)
+    if trajectory:
+        path = record_trajectory(stats)
+        print(f"trajectory appended to {path}")
+    return stats
+
+
 def main(quick=False):
     rows = run(quick=quick)
     print("micro: name,value (us_per_call unless suffixed)")
@@ -618,10 +721,17 @@ if __name__ == "__main__":
         "fractions merged into micro.json)",
     )
     ap.add_argument(
+        "--streaming-smoke",
+        action="store_true",
+        help="run only the streaming-service case (single-batch replay "
+        "parity vs the offline pipeline asserted, (8K+1) bound checked, "
+        "streaming_resolve_warm_x merged into micro.json)",
+    )
+    ap.add_argument(
         "--trajectory",
         action="store_true",
-        help="with --engines: also append a timestamped entry to the "
-        "repo-tracked BENCH_micro.json",
+        help="with --engines or --streaming-smoke: also append a "
+        "timestamped entry to the repo-tracked BENCH_micro.json",
     )
     ap.add_argument(
         "--check-floors",
@@ -645,5 +755,7 @@ if __name__ == "__main__":
         sharded_smoke(quick=args.quick)
     elif args.engines:
         engines_smoke(quick=args.quick, trajectory=args.trajectory)
+    elif args.streaming_smoke:
+        streaming_smoke(quick=args.quick, trajectory=args.trajectory)
     else:
         main(quick=args.quick)

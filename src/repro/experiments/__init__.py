@@ -26,6 +26,10 @@ from repro.experiments.sweep import (
     sweep,
 )
 
+# stream() is sweep()'s online sibling: same stages, event-driven driver.
+# Imported last — repro.streaming reads repro.experiments.results back.
+from repro.streaming import EpochRecord, StreamResult, stream  # noqa: E402
+
 __all__ = [
     "Bucket",
     "bucket_shape",
@@ -39,4 +43,7 @@ __all__ = [
     "InstanceRecord",
     "SweepResult",
     "sweep",
+    "EpochRecord",
+    "StreamResult",
+    "stream",
 ]

@@ -965,6 +965,7 @@ def schedule_batch_arrays(
     alloc: AllocationBatch,
     discipline: str = "reserving",
     engine: str = "auto",
+    busy: dict[tuple[int, int], dict[str, np.ndarray]] | None = None,
 ) -> list[tuple[list[CoreSchedule], np.ndarray]]:
     """Circuit-schedule straight off the unified padded pytrees.
 
@@ -981,43 +982,84 @@ def schedule_batch_arrays(
     the circuit is the pipeline's last array stage.  When the batch
     carries a `NamedSharding`, the JAX executor's member axis is padded
     to the shard count and placed with it.
+
+    ``busy`` (streaming re-solve support) maps ``(b, k)`` to phantom
+    flow tables — ``dict(src=, dst=, rel=, dur=)`` 1-D arrays describing
+    circuits already committed on core ``k`` of instance ``b`` (in-flight
+    non-preemptible transfers from a previous calendar).  Phantoms are
+    prepended at the HEAD of the member table, so they outrank every
+    real flow and claim their port pair first; in-flight circuits on one
+    core are port-exclusive, so every phantom establishes exactly at its
+    ``rel`` (asserted) and blocks its ingress/egress ports for ``dur``.
+    Phantom rows are sliced off before `CoreSchedule`s are built — the
+    returned schedules and CCTs cover real flows only.  ``busy=None``
+    (the default) leaves the stage bit-identical to its previous
+    behavior; ``(b, k)`` entries whose member has no real flows are
+    ignored (phantoms alone constrain nothing).
     """
     engine = _check_engine(discipline, engine)
     B = ensemble.num_instances
     if B == 0:
         return []
 
-    members = []  # (b, k, flow-row indices into the ordered flow axis)
+    # (b, k, flow-row indices into the ordered flow axis, phantom count)
+    members = []
     for b in range(B):
         coreb = alloc.core[b]
         validb = alloc.valid[b]
         for k in range(ensemble.num_cores[b]):
             idx = np.nonzero(validb & (coreb == k))[0]
             if idx.size:
-                members.append((b, k, idx))
+                nb = 0
+                if busy is not None and (b, k) in busy:
+                    nb = int(np.asarray(busy[b, k]["src"]).shape[0])
+                members.append((b, k, idx, nb))
 
     if members:
-        tabs = [
-            dict(
+        tabs = []
+        for b, k, idx, nb in members:
+            tab = dict(
                 src=alloc.src[b, idx],
                 dst=alloc.dst[b, idx],
                 rel=ensemble.releases[b, alloc.coflow[b, idx]],
                 dur=ensemble.delta[b]
                 + alloc.size[b, idx] / ensemble.rates[b, k],
             )
-            for b, k, idx in members
-        ]
+            if nb:
+                bz = busy[b, k]
+                tab = dict(
+                    src=np.concatenate(
+                        [np.asarray(bz["src"], tab["src"].dtype), tab["src"]]
+                    ),
+                    dst=np.concatenate(
+                        [np.asarray(bz["dst"], tab["dst"].dtype), tab["dst"]]
+                    ),
+                    rel=np.concatenate(
+                        [np.asarray(bz["rel"], np.float64), tab["rel"]]
+                    ),
+                    dur=np.concatenate(
+                        [np.asarray(bz["dur"], np.float64), tab["dur"]]
+                    ),
+                )
+            tabs.append(tab)
         est, comp = _execute_members(
             tabs,
             max(ensemble.num_ports[b] for b in range(B)),
             discipline,
             engine,
-            labels=[f"instance {b}, core {k}" for b, k, _ in members],
+            labels=[f"instance {b}, core {k}" for b, k, _, _ in members],
             sharding=ensemble.sharding,
         )
+        for g, (b, k, _, nb) in enumerate(members):
+            if nb and not np.array_equal(est[g, :nb], tabs[g]["rel"][:nb]):
+                raise AssertionError(
+                    f"instance {b}, core {k}: committed phantom circuits "
+                    "did not establish at their release — busy tables must "
+                    "be port-exclusive with rel at the epoch time"
+                )
 
     schedules_by_member = {
-        (b, k): g for g, (b, k, _) in enumerate(members)
+        (b, k): g for g, (b, k, _, _) in enumerate(members)
     }
     out = []
     for b in range(B):
@@ -1035,7 +1077,7 @@ def schedule_batch_arrays(
                     )
                 )
                 continue
-            _, _, idx = members[g]
+            _, _, idx, nb = members[g]
             F = idx.shape[0]
             schedules.append(
                 CoreSchedule(
@@ -1043,8 +1085,8 @@ def schedule_batch_arrays(
                     src=alloc.src[b, idx],
                     dst=alloc.dst[b, idx],
                     size=alloc.size[b, idx],
-                    establish=est[g, :F].copy(),
-                    complete=comp[g, :F].copy(),
+                    establish=est[g, nb:nb + F].copy(),
+                    complete=comp[g, nb:nb + F].copy(),
                     rate=float(ensemble.rates[b, k]),
                     delta=float(ensemble.delta[b]),
                 )

@@ -1,0 +1,21 @@
+"""Streaming scheduler service: online arrivals, rolling re-solve.
+
+The offline pipeline (`repro.pipeline`, `repro.experiments.sweep`)
+assumes every coflow is known up front.  This package runs the same
+LP → order → alloc → circuit stages as an **event-driven service**:
+coflows are admitted by release time (in arrival batches) into a
+ring-buffer slot pool, each arrival batch triggers a warm-started
+re-solve over the *residual* demands of the active set, and circuits
+already in flight are carried into the next calendar — preempted (with
+a fresh reconfiguration delta) or committed as phantom busy flows.
+
+  * `repro.streaming.pool`    — `SlotPool`, the bounded ring-buffer of
+    scheduler slots with a FIFO admission queue;
+  * `repro.streaming.service` — `stream()` (the driver, `sweep()`'s
+    online sibling), `StreamResult` / `EpochRecord` result types.
+"""
+
+from repro.streaming.pool import SlotPool
+from repro.streaming.service import EpochRecord, StreamResult, stream
+
+__all__ = ["SlotPool", "EpochRecord", "StreamResult", "stream"]

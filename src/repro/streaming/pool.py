@@ -1,0 +1,79 @@
+"""Ring-buffer slot pool for the streaming scheduler.
+
+The pool bounds the scheduler's working set: at most `size` coflows are
+*active* (hold a slot and participate in re-solves) at any time; the
+rest wait in a FIFO admission queue.  Slots are assigned in ring order
+(a rotating next-slot pointer, so slot ids churn through the buffer
+instead of piling up at index 0) and freed when a coflow's residual
+demand reaches zero.  Slot ids are the key for per-pair warm-start
+memory (`service._WarmState`): bounded state for an unbounded stream.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+__all__ = ["SlotPool"]
+
+
+class SlotPool:
+    """Bounded slot pool with ring-order assignment and a FIFO queue."""
+
+    def __init__(self, size: int):
+        if size <= 0:
+            raise ValueError(f"pool size must be positive, got {size}")
+        self.size = size
+        self._slot_coflow = [-1] * size  # slot -> global coflow id
+        self._slot_of: dict[int, int] = {}  # global coflow id -> slot
+        self._next = 0  # ring pointer: first slot probed on admission
+        self.queue: deque[int] = deque()  # arrived, waiting for a slot
+
+    @property
+    def num_active(self) -> int:
+        return len(self._slot_of)
+
+    @property
+    def num_free(self) -> int:
+        return self.size - len(self._slot_of)
+
+    def slot_of(self, coflow: int) -> int:
+        return self._slot_of[coflow]
+
+    def active_ids(self) -> list[int]:
+        """Active global coflow ids in ASCENDING id order.
+
+        Ascending-id order (not slot order) is the pool's dense-instance
+        convention: epoch instances list coflows by global id, so stable
+        tie-breaks in ordering stages match the offline oracle bit for
+        bit, and dense pair (i, j), i<j always maps to the same global
+        pair orientation across epochs.
+        """
+        return sorted(self._slot_of)
+
+    def push(self, coflows) -> None:
+        """Enqueue newly arrived coflows (FIFO, caller supplies order)."""
+        self.queue.extend(int(m) for m in coflows)
+
+    def admit_waiting(self) -> list[int]:
+        """Assign queued coflows to free slots in ring order.
+
+        Returns the admitted global ids, in admission order.  Stops when
+        the queue or the free slots run out.
+        """
+        admitted = []
+        while self.queue and self.num_free:
+            m = self.queue.popleft()
+            s = self._next
+            while self._slot_coflow[s] != -1:
+                s = (s + 1) % self.size
+            self._slot_coflow[s] = m
+            self._slot_of[m] = s
+            self._next = (s + 1) % self.size
+            admitted.append(m)
+        return admitted
+
+    def release(self, coflow: int) -> int:
+        """Free the slot held by `coflow`; returns the freed slot id."""
+        s = self._slot_of.pop(coflow)
+        self._slot_coflow[s] = -1
+        return s

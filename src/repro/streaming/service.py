@@ -1,0 +1,556 @@
+"""`stream()` — the event-driven online scheduler (sweep()'s sibling).
+
+Event loop (one *epoch* per event):
+
+  1. **Arrival batches.**  Coflows are sorted by release time and grouped
+     into arrival batches — ``n_batches`` equal chunks (replay-style: a
+     chunk is admitted when its first coflow arrives, original releases
+     are honored as lower bounds) or a ``batch_window`` grouping (true
+     online: the scheduler acts when the last coflow of the window has
+     arrived).  The default (``batch_window=None``) re-solves once per
+     distinct arrival instant.
+  2. **Advance.**  At epoch time ``now`` the incumbent calendar is
+     settled: flows with ``complete <= now`` are delivered (their exact
+     size leaves the residual demand), flows with ``establish >= now``
+     are cancelled back into the pool, and in-flight flows are either
+     *preempted* (``preempt=True``: the bytes sent so far leave the
+     residual; the remainder re-pays the reconfiguration delta when it
+     is re-established) or *committed* (``preempt=False``: the flow runs
+     to completion as a phantom busy circuit blocking its port pair in
+     every later calendar — see ``schedule_batch_arrays(busy=...)``).
+     Coflows whose residual reaches zero free their pool slot.
+  3. **Admit.**  Queued arrivals take free slots in ring order
+     (`repro.streaming.pool.SlotPool`); overflow waits (admission
+     latency is reported per coflow).
+  4. **Re-solve.**  The active set becomes a dense residual
+     `CoflowInstance` (coflows in ascending global-id order, releases
+     clamped to ``max(arrival, now)``) and runs the *same* stages as the
+     offline `Pipeline.run_batch`: ordering LP → masked stable order →
+     batched allocation scan → batched circuit calendar.  The ordering
+     LP is warm-started: the previous epoch's precedence iterate is
+     stored per slot pair and seeds ``Y0`` for every pair of coflows
+     that was already solved together, and warm epochs run
+     ``lp_iters_warm`` (< ``lp_iters``) subgradient steps.
+
+With one arrival batch and preemption disabled the loop degenerates to
+exactly one epoch whose instance *is* the offline instance, so orders,
+allocations and CCTs are bit-identical to `Pipeline.run_batch` —
+`tests/test_streaming.py` fuzzes that replay-parity contract, and the
+paper's (8K+1) arbitrary-release bound is asserted on every streamed
+run against the exact LP lower bound of the full instance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import lp
+from repro.core.allocation import Allocation
+from repro.core.coflow import CoflowInstance
+from repro.core.validate import validate_schedule
+from repro.pipeline import build_ensemble_batch, get_pipeline
+from repro.pipeline.batch_circuit import schedule_batch_arrays
+from repro.pipeline.stages import ListCircuit
+from repro.streaming.pool import SlotPool
+
+__all__ = ["EpochRecord", "StreamResult", "stream"]
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    """One re-solve: who was active, what the scheduler decided."""
+
+    index: int
+    time: float  # epoch (event) time
+    actives: np.ndarray  # global coflow ids, dense order (ascending id)
+    admitted: np.ndarray  # global ids admitted at this epoch
+    order: np.ndarray  # global ids, highest priority first
+    allocation: Allocation  # epoch-dense coflow indexing
+    ccts: np.ndarray  # (Me,) projected absolute completions, dense
+    lp: lp.LPSolution | None
+    warm: bool  # LP seeded from the previous iterate
+    lp_iters_used: int
+    lp_wall_s: float
+    num_busy: int  # phantom committed circuits carried in
+    wall_s: float
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Realized outcome of one streamed run (absolute times throughout)."""
+
+    scheme: str
+    discipline: str
+    lp_method: str
+    preempt: bool
+    warm_start: bool
+    pool_size: int
+    lp_iters: int
+    lp_iters_warm: int
+    weights: np.ndarray  # (M,)
+    arrival: np.ndarray  # (M,) release/arrival times
+    admission: np.ndarray  # (M,) epoch time the coflow got a slot
+    finish: np.ndarray  # (M,) realized completion (last byte delivered)
+    epochs: list[EpochRecord]
+    lp_time_s: float
+    wall_time_s: float
+
+    @property
+    def realized_weighted_cct(self) -> float:
+        """Sum_m w_m T_m with T_m the realized absolute completion."""
+        return float(np.dot(self.weights, self.finish))
+
+    @property
+    def num_resolves(self) -> int:
+        return len(self.epochs)
+
+    @property
+    def warm_resolves(self) -> int:
+        return sum(1 for e in self.epochs if e.warm)
+
+    @property
+    def iteration_savings(self) -> int:
+        """Subgradient iterations avoided by warm-started re-solves."""
+        return sum(
+            self.lp_iters - e.lp_iters_used for e in self.epochs if e.warm
+        )
+
+    def coflow_rows(self, base: dict | None = None) -> list[dict]:
+        """One row per coflow: arrival → admission → completion."""
+        base = dict(base or {})
+        rows = []
+        for m in range(self.weights.shape[0]):
+            rows.append(
+                dict(
+                    base,
+                    coflow=m,
+                    weight=float(self.weights[m]),
+                    arrival=float(self.arrival[m]),
+                    admission=float(self.admission[m]),
+                    completion=float(self.finish[m]),
+                    cct=float(self.finish[m] - self.arrival[m]),
+                    latency=float(self.finish[m] - self.admission[m]),
+                    wait=float(self.admission[m] - self.arrival[m]),
+                )
+            )
+        return rows
+
+    def epoch_rows(self, base: dict | None = None) -> list[dict]:
+        base = dict(base or {})
+        return [
+            dict(
+                base,
+                epoch=e.index,
+                time=e.time,
+                num_active=int(e.actives.shape[0]),
+                num_admitted=int(e.admitted.shape[0]),
+                num_busy=e.num_busy,
+                warm=e.warm,
+                lp_iters_used=e.lp_iters_used,
+                lp_objective=(
+                    float(e.lp.objective) if e.lp is not None else None
+                ),
+                lp_wall_s=e.lp_wall_s,
+                wall_s=e.wall_s,
+            )
+            for e in self.epochs
+        ]
+
+    def summary(self) -> dict[str, Any]:
+        cct = self.finish - self.arrival
+        return dict(
+            scheme=self.scheme,
+            discipline=self.discipline,
+            lp_method=self.lp_method,
+            preempt=self.preempt,
+            warm_start=self.warm_start,
+            pool_size=self.pool_size,
+            num_coflows=int(self.weights.shape[0]),
+            realized_weighted_cct=self.realized_weighted_cct,
+            num_resolves=self.num_resolves,
+            warm_resolves=self.warm_resolves,
+            iteration_savings=self.iteration_savings,
+            mean_cct=float(cct.mean()) if cct.size else 0.0,
+            p95_cct=float(np.quantile(cct, 0.95)) if cct.size else 0.0,
+            mean_wait=(
+                float((self.admission - self.arrival).mean())
+                if cct.size
+                else 0.0
+            ),
+            lp_time_s=self.lp_time_s,
+            wall_time_s=self.wall_time_s,
+        )
+
+    def save(self, name: str) -> dict[str, str]:
+        """Write `{name}_coflows` / `{name}_epochs` JSON+CSV rows and a
+        `{name}_summary` JSON into `repro.experiments.results.results_dir`."""
+        from repro.experiments.results import save_json, save_rows
+
+        base = dict(scheme=self.scheme, discipline=self.discipline)
+        cj, cc = save_rows(f"{name}_coflows", self.coflow_rows(base))
+        ej, ec = save_rows(f"{name}_epochs", self.epoch_rows(base))
+        sj = save_json(f"{name}_summary", self.summary())
+        return dict(
+            coflows_json=cj, coflows_csv=cc,
+            epochs_json=ej, epochs_csv=ec, summary_json=sj,
+        )
+
+
+class _WarmState:
+    """Slot-pair warm-start memory for the subgradient LP.
+
+    ``Y[sa, sb]`` stores the full precedence value x_{a,b} (prob. the
+    coflow in slot ``sa`` precedes the one in ``sb``) from the last
+    solve that contained both; storing the *full* matrix (not just the
+    upper triangle) makes the gather orientation-free: dense pair
+    (i, j), i < j reads ``Y[s_i, s_j]`` whatever the slot order is.
+    A slot's rows go stale the moment it is freed (``solved`` cleared).
+    """
+
+    def __init__(self, size: int):
+        self.Y = np.zeros((size, size), dtype=np.float32)
+        self.solved = np.zeros(size, dtype=bool)
+
+    def gather(self, slots: np.ndarray, default_Y0: np.ndarray) -> tuple:
+        """Warm Y0 for the dense active set; returns (Y0, any_warm)."""
+        prev = self.solved[slots]
+        both = prev[:, None] & prev[None, :]
+        if not np.triu(both, k=1).any():
+            return default_Y0, False
+        Ys = self.Y[np.ix_(slots, slots)]
+        return np.triu(np.where(both, Ys, default_Y0), k=1), True
+
+    def scatter(self, slots: np.ndarray, precedence: np.ndarray) -> None:
+        self.Y[np.ix_(slots, slots)] = precedence.astype(np.float32)
+        self.solved[slots] = True
+
+    def forget(self, slot: int) -> None:
+        self.solved[slot] = False
+
+
+def _arrival_batches(
+    releases: np.ndarray,
+    n_batches: int | None,
+    batch_window: float | None,
+) -> list[tuple[float, list[int]]]:
+    """Group coflows into arrival batches: [(epoch_time, [global ids])].
+
+    ``n_batches``: split the release-sorted trace into that many chunks;
+    a chunk's epoch fires when its FIRST coflow arrives (replay-style —
+    later members are admitted early but their releases still lower-bound
+    every establishment).  ``batch_window``: group coflows whose releases
+    fall within one window; the epoch fires at the LAST release of the
+    group (true online — nothing is known before it arrives).  Default
+    (both None): one batch per distinct release instant.
+    """
+    if n_batches is not None and batch_window is not None:
+        raise ValueError("pass n_batches or batch_window, not both")
+    order = np.argsort(releases, kind="stable")
+    if order.size == 0:
+        return []
+    if n_batches is not None:
+        if n_batches <= 0:
+            raise ValueError(f"n_batches must be positive, got {n_batches}")
+        chunks = np.array_split(order, min(n_batches, order.size))
+        return [
+            (float(releases[c[0]]), [int(m) for m in c])
+            for c in chunks
+            if c.size
+        ]
+    window = 0.0 if batch_window is None else float(batch_window)
+    if window < 0:
+        raise ValueError(f"batch_window must be >= 0, got {batch_window}")
+    rs = releases[order]
+    batches = []
+    i = 0
+    while i < order.size:
+        j = i + 1
+        while j < order.size and rs[j] <= rs[i] + window:
+            j += 1
+        batches.append((float(rs[j - 1]), [int(m) for m in order[i:j]]))
+        i = j
+    return batches
+
+
+def stream(
+    instance: CoflowInstance,
+    *,
+    scheme: str = "ours",
+    lp_method: str = "batch",
+    lp_iters: int = 3000,
+    lp_iters_warm: int | None = None,
+    discipline: str = "greedy",
+    engine: str = "auto",
+    n_batches: int | None = None,
+    batch_window: float | None = None,
+    pool_size: int | None = None,
+    preempt: bool = True,
+    warm_start: bool = True,
+    validate: bool = True,
+) -> StreamResult:
+    """Schedule `instance`'s coflows online, admitting by release time.
+
+    ``instance.releases`` are the arrival times (use
+    `repro.traffic.arrivals.with_releases` to stamp a generated arrival
+    process onto any workload).  ``lp_method`` is ``"batch"`` (the
+    warm-startable subgradient solver — the production path) or
+    ``"exact"`` (per-epoch HiGHS; deterministic, used by the parity
+    tests).  See the module docstring for the event-loop semantics; with
+    ``n_batches=1`` and ``preempt=False`` the run replays the offline
+    `Pipeline.run_batch` bit for bit.
+    """
+    t_start = time.perf_counter()
+    M = instance.num_coflows
+    if lp_method not in ("batch", "exact"):
+        raise ValueError(f"lp_method must be 'batch' or 'exact', {lp_method!r}")
+    if lp_iters_warm is None:
+        lp_iters_warm = max(lp_iters // 3, 1)
+
+    # The pipeline's own LP stage is never asked to solve (epoch LPs are
+    # solved here, warm-started, and fed in as completions), so its
+    # lp_method is immaterial; "exact" keeps the registry validation happy.
+    pipe = get_pipeline(
+        scheme,
+        discipline=discipline,
+        lp_method="exact",
+        lp_iters=lp_iters,
+        circuit_backend="batch",
+        circuit_engine=engine,
+    )
+    circuit = pipe.circuit_stage
+    if not isinstance(circuit, ListCircuit) or circuit.backend != "batch":
+        raise ValueError(
+            f"stream() requires a batched list-circuit scheme; {scheme!r} "
+            f"uses {type(circuit).__name__}"
+        )
+    order_stage = pipe.order_stage
+    needs_lp = bool(getattr(order_stage, "needs_lp", False))
+
+    S = M if pool_size is None else int(pool_size)
+    result = StreamResult(
+        scheme=scheme, discipline=discipline, lp_method=lp_method,
+        preempt=preempt, warm_start=warm_start, pool_size=S,
+        lp_iters=lp_iters, lp_iters_warm=lp_iters_warm,
+        weights=np.asarray(instance.weights, dtype=np.float64).copy(),
+        arrival=np.asarray(instance.releases, dtype=np.float64).copy(),
+        admission=np.zeros(M), finish=np.zeros(M),
+        epochs=[], lp_time_s=0.0, wall_time_s=0.0,
+    )
+    if M == 0:
+        result.wall_time_s = time.perf_counter() - t_start
+        return result
+
+    pool = SlotPool(S)
+    warm = _WarmState(S)
+    residual = np.asarray(instance.demands, dtype=np.float64).copy()
+    finished = np.zeros(M, dtype=bool)
+    # Incumbent calendar: (m, k, i, j, size, establish, complete) rows.
+    incumbent: list[tuple] = []
+    # Committed (non-preemptible) circuits still in flight: (k, i, j, end).
+    busy_list: list[tuple] = []
+    last_ccts: dict[int, float] = {}  # projected completion per active id
+    two_pi_ports = 2 * instance.num_ports  # flat port axis for LP padding
+
+    def _advance(now: float) -> None:
+        """Settle the incumbent calendar at `now`; free drained slots."""
+        nonlocal incumbent, busy_list
+        new_busy = []
+        for m, k, i, j, size, est, comp in incumbent:
+            if comp <= now:  # delivered in full
+                residual[m, i, j] -= size
+                result.finish[m] = max(result.finish[m], comp)
+            elif est < now:  # in flight
+                if preempt:
+                    rate = float(instance.rates[k])
+                    sent = rate * max(0.0, now - est - instance.delta)
+                    if sent >= size:  # complete within float rounding
+                        residual[m, i, j] -= size
+                        result.finish[m] = max(result.finish[m], comp)
+                    else:
+                        residual[m, i, j] -= sent
+                else:  # committed: runs to completion as a phantom
+                    residual[m, i, j] -= size
+                    result.finish[m] = max(result.finish[m], comp)
+                    new_busy.append((k, i, j, comp))
+            # else: not yet established — cancelled back into the pool.
+        incumbent = []
+        np.maximum(residual, 0.0, out=residual)  # exact-0 guard only
+        busy_list = [bz for bz in busy_list if bz[3] > now] + new_busy
+        for m in pool.active_ids():
+            if not residual[m].any():
+                finished[m] = True
+                last_ccts.pop(m, None)
+                warm.forget(pool.release(m))
+
+    def _admit(now: float) -> list[int]:
+        """Move queued arrivals into free slots (ring order, FIFO)."""
+        admitted_all = []
+        while True:
+            admitted = pool.admit_waiting()
+            if not admitted:
+                return admitted_all
+            for m in admitted:
+                result.admission[m] = now
+                if residual[m].any():
+                    admitted_all.append(m)
+                else:  # degenerate zero-demand coflow: done on arrival
+                    result.finish[m] = max(result.finish[m], now)
+                    finished[m] = True
+                    warm.forget(pool.release(m))
+
+    def _epoch(now: float, admitted: list[int]) -> None:
+        """Re-solve the active residual set; install the new calendar."""
+        nonlocal incumbent
+        t_epoch = time.perf_counter()
+        actives = pool.active_ids()
+        if not actives:
+            return
+        act = np.asarray(actives, dtype=np.int64)
+        Me = act.shape[0]
+        inst_e = CoflowInstance(
+            demands=residual[act].copy(),
+            weights=result.weights[act].copy(),
+            releases=np.maximum(result.arrival[act], now),
+            rates=np.asarray(instance.rates, dtype=np.float64).copy(),
+            delta=instance.delta,
+        )
+
+        lp_sol = None
+        is_warm = False
+        iters_used = 0
+        lp_wall = 0.0
+        if needs_lp:
+            t_lp = time.perf_counter()
+            if lp_method == "exact":
+                lp_sol = lp.solve_exact(inst_e)
+            else:
+                arrays = lp.pack_lp_arrays(
+                    [inst_e], pad_coflows=S, pad_ports=two_pi_ports
+                )
+                slots = np.asarray(
+                    [pool.slot_of(m) for m in actives], dtype=np.int64
+                )
+                if warm_start:
+                    Y0, is_warm = warm.gather(
+                        slots, arrays["Y0"][0, :Me, :Me]
+                    )
+                    arrays["Y0"][0, :Me, :Me] = Y0
+                iters_used = lp_iters_warm if is_warm else lp_iters
+                batch = lp.solve_subgradient_batch_arrays(
+                    arrays, iters=iters_used
+                )
+                lp_sol = batch.unpack([Me])[0]
+                warm.scatter(slots, lp_sol.precedence)
+            lp_wall = time.perf_counter() - t_lp
+            result.lp_time_s += lp_wall
+
+        ensemble = build_ensemble_batch([inst_e], with_lp_arrays=False)
+        if needs_lp:
+            comp = np.zeros(ensemble.weights.shape)
+            comp[0, :Me] = lp_sol.completion
+            orders_arr = order_stage.order_batch(ensemble, comp)
+        else:
+            orders_arr = order_stage.order_batch(ensemble)
+        alloc_batch = pipe.allocate_stage.allocate_batch_arrays(
+            ensemble, orders_arr
+        )
+        busy = None
+        if busy_list:
+            busy = {}
+            for k in range(instance.num_cores):
+                rows = [bz for bz in busy_list if bz[0] == k]
+                if rows:
+                    busy[0, k] = dict(
+                        src=np.asarray([r[1] for r in rows], np.int64),
+                        dst=np.asarray([r[2] for r in rows], np.int64),
+                        rel=np.full(len(rows), now, dtype=np.float64),
+                        dur=np.asarray(
+                            [r[3] - now for r in rows], np.float64
+                        ),
+                    )
+        pairs = schedule_batch_arrays(
+            ensemble, alloc_batch,
+            discipline=circuit.discipline, engine=circuit.engine,
+            busy=busy,
+        )
+        schedules, ccts_e = pairs[0]
+        if validate:
+            validate_schedule(inst_e, schedules)
+
+        incumbent = []
+        for k, cs in enumerate(schedules):
+            for f in range(len(cs.coflow)):
+                incumbent.append(
+                    (
+                        int(act[cs.coflow[f]]), k,
+                        int(cs.src[f]), int(cs.dst[f]),
+                        float(cs.size[f]),
+                        float(cs.establish[f]), float(cs.complete[f]),
+                    )
+                )
+        for d, m in enumerate(actives):
+            last_ccts[m] = float(ccts_e[d])
+
+        alloc = alloc_batch.materialize(ensemble)[0]
+        order_dense = np.asarray(orders_arr[0][:Me])
+        result.epochs.append(
+            EpochRecord(
+                index=len(result.epochs),
+                time=now,
+                actives=act,
+                admitted=np.asarray(admitted, dtype=np.int64),
+                order=act[order_dense],
+                allocation=alloc,
+                ccts=np.asarray(ccts_e, dtype=np.float64).copy(),
+                lp=lp_sol,
+                warm=is_warm,
+                lp_iters_used=iters_used,
+                lp_wall_s=lp_wall,
+                num_busy=0 if busy is None else len(busy_list),
+                wall_s=time.perf_counter() - t_epoch,
+            )
+        )
+
+    # --- event loop -------------------------------------------------------
+    for now, ids in _arrival_batches(result.arrival, n_batches, batch_window):
+        _advance(now)
+        pool.push(ids)
+        admitted = _admit(now)
+        _epoch(now, admitted)
+
+    while pool.queue:  # pool-bound overflow: admit as slots drain
+        actives = pool.active_ids()
+        if not actives:
+            raise RuntimeError("admission queue stuck with an empty pool")
+        now = min(last_ccts[m] for m in actives)
+        _advance(now)
+        admitted = _admit(now)
+        if not admitted:
+            raise RuntimeError(
+                "drain epoch freed no slot — non-increasing calendar?"
+            )
+        _epoch(now, admitted)
+
+    # Final calendar runs to completion undisturbed.
+    for m, k, i, j, size, est, comp in incumbent:
+        residual[m, i, j] -= size
+        result.finish[m] = max(result.finish[m], comp)
+    incumbent = []
+    np.maximum(residual, 0.0, out=residual)
+    for m in pool.active_ids():
+        if residual[m].any():
+            raise RuntimeError(
+                f"coflow {m} left {residual[m].sum():g} undelivered demand"
+            )
+        finished[m] = True
+        warm.forget(pool.release(m))
+    if not finished.all():
+        missing = np.nonzero(~finished)[0]
+        raise RuntimeError(f"coflows never completed: {missing.tolist()}")
+
+    result.wall_time_s = time.perf_counter() - t_start
+    return result

@@ -1,5 +1,13 @@
-"""Workload substrate: Facebook trace parsing + synthetic generation."""
+"""Workload substrate: Facebook trace parsing, synthetic generation,
+and arrival-process generators for the streaming scheduler."""
 
+from repro.traffic.arrivals import (
+    diurnal_arrivals,
+    onoff_arrivals,
+    periodic_waves,
+    poisson_arrivals,
+    with_releases,
+)
 from repro.traffic.facebook import (
     load_fbt,
     synthesize_facebook_like,
@@ -13,4 +21,9 @@ __all__ = [
     "TraceCoflow",
     "sample_instance",
     "paper_default_instance",
+    "poisson_arrivals",
+    "onoff_arrivals",
+    "diurnal_arrivals",
+    "periodic_waves",
+    "with_releases",
 ]

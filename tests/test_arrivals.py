@@ -1,0 +1,104 @@
+"""Arrival-process generator tests: seeded determinism + coarse
+distribution checks, sized to stay fast in CI (a few thousand draws)."""
+
+import numpy as np
+import pytest
+
+from repro.core.coflow import CoflowInstance
+from repro.traffic.arrivals import (
+    diurnal_arrivals,
+    onoff_arrivals,
+    periodic_waves,
+    poisson_arrivals,
+    with_releases,
+)
+from repro.traffic.instances import random_instance
+
+GENERATORS = [
+    lambda n, seed: poisson_arrivals(n, seed=seed),
+    lambda n, seed: onoff_arrivals(n, seed=seed),
+    lambda n, seed: diurnal_arrivals(n, seed=seed),
+    lambda n, seed: periodic_waves(n, seed=seed),
+]
+
+
+@pytest.mark.parametrize("gen", GENERATORS)
+def test_generators_are_seed_deterministic_sorted_nonnegative(gen):
+    a = gen(200, 7)
+    b = gen(200, 7)
+    c = gen(200, 8)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)  # seed actually matters
+    assert a.shape == (200,)
+    assert 0.0 <= a[0] < a[-1]  # starts at/near zero
+    assert (np.diff(a) >= 0).all()
+    assert gen(0, 0).shape == (0,)
+
+
+def test_poisson_interarrival_mean():
+    a = poisson_arrivals(4000, mean_interarrival_ms=250.0, seed=3)
+    gaps = np.diff(a)
+    # Exponential(250) mean within 10% at n=4000.
+    assert abs(gaps.mean() - 250.0) / 250.0 < 0.10
+    # Memoryless: coefficient of variation ~ 1.
+    assert abs(gaps.std() / gaps.mean() - 1.0) < 0.15
+
+
+def test_onoff_burstiness_ratio():
+    # ON arrivals every ~50ms, OFF gaps ~20x the ON sojourn: the process
+    # must be much burstier than Poisson — most gaps small, a heavy tail
+    # of long silences, and a peak-to-mean rate ratio near
+    # (mean_on + mean_off) / mean_on = 11.
+    a = onoff_arrivals(
+        4000, mean_on_ms=1000.0, mean_off_ms=10_000.0,
+        mean_interarrival_on_ms=50.0, seed=5,
+    )
+    gaps = np.diff(a)
+    burstiness = gaps.mean() / np.median(gaps)
+    assert burstiness > 3.0  # Poisson has mean/median ~ 1.44
+    # Long-run rate is dominated by OFF periods.
+    assert gaps.mean() > 3 * 50.0
+    # Coefficient of variation far above the Poisson value of 1.
+    assert gaps.std() / gaps.mean() > 2.0
+
+
+def test_diurnal_rate_modulation():
+    # With a strong diurnal depth, arrivals concentrate in the "day"
+    # half-period (sin > 0) and thin out at "night".
+    period = 20_000.0
+    a = diurnal_arrivals(
+        6000, period_ms=period, mean_interarrival_ms=20.0,
+        depth=0.9, seed=2,
+    )
+    phase = np.mod(a, period) / period
+    day = ((phase > 0.0) & (phase < 0.5)).sum()
+    night = ((phase >= 0.5) & (phase < 1.0)).sum()
+    assert day > 1.5 * night
+    with pytest.raises(ValueError):
+        diurnal_arrivals(10, depth=1.5)
+
+
+def test_periodic_waves_structure():
+    a = periodic_waves(
+        64, period_ms=1000.0, wave_size=8, jitter_ms=10.0, seed=1
+    )
+    # 64 coflows in 8 waves of 8, each within its jitter window.
+    wave = np.floor_divide(a, 1000.0)
+    counts = np.bincount(wave.astype(int), minlength=8)
+    assert (counts == 8).all()
+    within = np.mod(a, 1000.0)
+    assert within.max() < 10.0 + 1e-9
+    with pytest.raises(ValueError):
+        periodic_waves(10, wave_size=0)
+
+
+def test_with_releases_stamps_and_validates():
+    inst = random_instance(num_coflows=6, num_ports=3, num_cores=2, seed=0)
+    arr = poisson_arrivals(6, mean_interarrival_ms=100.0, seed=4)
+    out = with_releases(inst, arr)
+    assert isinstance(out, CoflowInstance)
+    np.testing.assert_array_equal(out.releases, arr)
+    np.testing.assert_array_equal(out.demands, inst.demands)
+    assert np.array_equal(inst.releases, np.zeros(6))  # original untouched
+    with pytest.raises(ValueError):
+        with_releases(inst, arr[:-1])

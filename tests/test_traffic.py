@@ -1,13 +1,18 @@
 """Tests for the traffic substrate (FBT parser + synthetic trace)."""
 
+import pathlib
+
 import numpy as np
 
+from repro.core.coflow import CoflowInstance
 from repro.traffic.facebook import (
     load_fbt,
     synthesize_facebook_like,
     to_demands,
 )
 from repro.traffic.instances import paper_default_instance, sample_instance
+
+FIXTURE = pathlib.Path(__file__).parent / "data" / "tiny.fbt"
 
 
 def test_fbt_parser_roundtrip(tmp_path):
@@ -24,6 +29,53 @@ def test_fbt_parser_roundtrip(tmp_path):
     assert list(coflows[0].reducers) == [3, 7]
     np.testing.assert_allclose(coflows[0].reducer_mb, [12.5, 4.0])
     assert coflows[1].reducer_mb[0] == 9.75
+
+
+def test_fbt_fixture_parses_edge_cases():
+    """Committed fixture: single-mapper coflow, zero-MB reducer, and
+    out-of-order arrival timestamps (file order is NOT arrival order)."""
+    coflows = load_fbt(str(FIXTURE))
+    assert len(coflows) == 4
+    # Parser preserves file order; arrivals are out of order on purpose.
+    arrivals = [c.arrival_ms for c in coflows]
+    assert arrivals == [0.0, 120.0, 60.0, 45.0]
+    assert arrivals != sorted(arrivals)
+    # Single-mapper coflow with a zero-MB reducer alongside a real one.
+    single = coflows[1]
+    assert list(single.mappers) == [3]
+    assert list(single.reducers) == [4, 7]
+    np.testing.assert_allclose(single.reducer_mb, [0.0, 6.0])
+
+
+def test_fbt_fixture_to_demands_end_to_end():
+    coflows = load_fbt(str(FIXTURE))
+    port_map = {m: m for m in range(10)}
+    rng = np.random.default_rng(0)
+    demands = to_demands(coflows, port_map, 10, rng)
+    assert demands.shape == (4, 10, 10)
+    # Receiver totals survive the matrix construction.
+    for cf, mat in zip(coflows, demands):
+        np.testing.assert_allclose(mat.sum(), cf.reducer_mb.sum(), rtol=1e-9)
+    # Zero-MB reducer contributes nothing to its column.
+    assert demands[1][:, 4].sum() == 0.0
+    # Single-mapper coflow: every byte leaves its one sender's row.
+    np.testing.assert_allclose(demands[1][3].sum(), 6.0, rtol=1e-9)
+    assert np.delete(demands[1], 3, axis=0).sum() == 0.0
+
+    # End-to-end: the parsed trace streams online with its (out-of-order)
+    # arrival stamps as releases.
+    from repro.experiments import stream
+
+    inst = CoflowInstance(
+        demands=demands,
+        weights=np.ones(4),
+        releases=np.array([c.arrival_ms for c in coflows]),
+        rates=np.array([10.0, 20.0]),
+        delta=2.0,
+    )
+    res = stream(inst, lp_method="exact", preempt=False)
+    assert (res.finish >= res.arrival).all()
+    assert res.num_resolves >= 3  # distinct arrival instants => epochs
 
 
 def test_synthetic_trace_shape_and_determinism():
