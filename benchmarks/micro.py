@@ -24,9 +24,15 @@ online streaming service on a small Poisson-arrival trace: single-batch
 replay parity against the offline pipeline and the (8K+1) bound are
 asserted, and the warm-start re-solve speedup
 (``streaming_resolve_warm_x``) joins the same artifacts.
+``--cache-smoke`` runs one sweep uncached / cached-fresh / cached-replay
+(replay must compute zero cells, exports byte-identical) and merges the
+replay speedup + cache-overhead ratio into the artifact, leaving the
+cache manifest under ``results/benchmarks/cache_smoke/`` for upload.
 ``--check-floors`` gates the current
 ``results/benchmarks/micro.json`` against ``benchmarks/floors.json``
-(exit 1 on any speedup below its floor) — the CI regression gate."""
+(exit 1 on any speedup below its floor) — the CI regression gate;
+``--floor-keys a,b`` restricts the gate to a subset so CI jobs running
+disjoint bench subsets each gate only what they produced."""
 
 from __future__ import annotations
 
@@ -306,6 +312,38 @@ def bench_circuit_engines(quick=False, ensemble_size=24, lp_iters=200):
     return stats
 
 
+# Every trajectory entry must carry these: without them a committed
+# number is uninterpretable (was that 3x on CPU or on a v5e?).
+TRAJECTORY_META = ("backend", "device_kind", "num_devices", "jax_version")
+
+
+def backend_metadata():
+    """The per-entry device/backend stamp for ``BENCH_micro.json``."""
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "num_devices": len(jax.devices()),
+        "jax_version": jax.__version__,
+    }
+
+
+def validate_trajectory(doc, path="BENCH_micro.json"):
+    """Schema check for the trajectory file: every entry's stats must
+    carry all ``TRAJECTORY_META`` keys.  Returns failure strings."""
+    failures = []
+    if doc.get("schema") != "bench-micro-trajectory-v1":
+        failures.append(f"{path}: bad schema {doc.get('schema')!r}")
+    for i, entry in enumerate(doc.get("entries", [])):
+        stats = entry.get("stats", {})
+        missing = [k for k in TRAJECTORY_META if k not in stats]
+        if missing:
+            failures.append(
+                f"{path} entry {i} ({entry.get('timestamp')}): "
+                f"missing metadata keys {missing}"
+            )
+    return failures
+
+
 def record_trajectory(stats, path=None):
     """Append one entry to the repo-tracked ``BENCH_micro.json``.
 
@@ -313,6 +351,9 @@ def record_trajectory(stats, path=None):
     trajectory file is committed: each entry is a timestamped snapshot of
     the engine timings plus the backend metadata that makes numbers from
     different machines comparable, so perf history survives in review.
+    The ``TRAJECTORY_META`` backend stamp is added automatically when the
+    caller's stats lack it, and the whole file (old entries included) is
+    schema-validated on every append — a malformed entry can't land.
     """
     import json
     import os
@@ -324,6 +365,7 @@ def record_trajectory(stats, path=None):
     if os.path.exists(path):
         with open(path) as f:
             doc = json.load(f)
+    stats = {**backend_metadata(), **stats}
     doc["entries"].append(
         {
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -333,18 +375,23 @@ def record_trajectory(stats, path=None):
             },
         }
     )
+    failures = validate_trajectory(doc, path)
+    if failures:
+        raise AssertionError("; ".join(failures))
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
     return path
 
 
-def check_floors(floors_path=None):
+def check_floors(floors_path=None, keys=None):
     """Benchmark-regression gate: compare the current run's
     ``results/benchmarks/micro.json`` against ``benchmarks/floors.json``.
 
-    Every key in the floors file must be present in the results and meet
-    its floor (all floors are lower bounds on speedup ratios).  Returns
+    Every checked key must be present in the results and meet its floor
+    (all floors are lower bounds on speedup ratios).  ``keys`` restricts
+    the check to a subset of the floors file — CI jobs that run disjoint
+    benchmark subsets each gate only the keys they produced.  Returns
     the list of failure strings — empty means pass; the CLI exits
     nonzero on any failure so CI can gate on it.
     """
@@ -357,6 +404,11 @@ def check_floors(floors_path=None):
         floors_path = os.path.join(os.path.dirname(__file__), "floors.json")
     with open(floors_path) as f:
         floors = json.load(f)
+    if keys is not None:
+        unknown = [k for k in keys if k not in floors]
+        if unknown:
+            return [f"floor keys not in {floors_path}: {unknown}"]
+        floors = {k: floors[k] for k in keys}
     res_path = os.path.join(results_dir(), "micro.json")
     if not os.path.exists(res_path):
         return [f"no results at {res_path}: run the benchmark first"]
@@ -415,6 +467,9 @@ def run(quick=False):
     # Sharded-ensemble sweep vs single device (data-axis NamedSharding;
     # 1-device meshes still exercise the sharded code path).
     rows.extend(bench_sharded_sweep(quick=quick).items())
+
+    # Content-addressed sweep cache: replay speedup + overhead ratio.
+    rows.extend(bench_sweep_cache(quick=quick).items())
 
     # Kernel oracles (interpret mode on CPU).
     from repro.kernels.lp_terms import lp_terms, lp_terms_batch
@@ -689,6 +744,110 @@ def streaming_smoke(quick=False, trajectory=False):
     return stats
 
 
+def bench_sweep_cache(quick=False, ensemble_size=12, lp_iters=200):
+    """Content-addressed sweep cache: replay speedup + byte-identity.
+
+    One mixed-shape ensemble through ``sweep`` three ways — uncached,
+    cached-fresh (every cell a miss: compute + store) and cached-replay
+    (every cell a hit: the pipeline is short-circuited entirely).  The
+    replay pass must report **zero computed cells** via the sweep's
+    cache-hit counters, and all three passes must export byte-identical
+    rows — the cache is a pure memo, never an approximation.
+
+    Metrics: ``sweep_cache_replay_x`` (uncached wall / replay wall, the
+    point of the cache) and ``sweep_cache_fresh_vs_uncached_x``
+    (uncached wall / cached-fresh wall — a *cache overhead* gate: hashing
+    + storing a miss must stay a small fraction of compute).
+    """
+    import json
+    import os
+    import shutil
+
+    from benchmarks.common import results_dir
+    from repro.experiments import SweepCache, sweep
+
+    B = 6 if quick else ensemble_size
+    iters = 100 if quick else lp_iters
+    rng = np.random.default_rng(7)
+    ens = [
+        random_instance(
+            num_coflows=int(rng.integers(12, 32)),
+            num_ports=int(rng.integers(4, 10)),
+            num_cores=int(rng.integers(2, 5)),
+            seed=700 + s,
+        )
+        for s in range(B)
+    ]
+    cache_root = os.path.join(results_dir(), "cache_smoke")
+    shutil.rmtree(cache_root, ignore_errors=True)
+    kwargs = dict(
+        schemes=("ours", "wspt_order"), lp_iters=iters, validate=False
+    )
+
+    sweep(ens, **kwargs)  # compile/warmup pass
+    t0 = time.perf_counter()
+    res_uncached = sweep(ens, **kwargs)
+    t_uncached = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res_fresh = sweep(ens, cache=cache_root, **kwargs)
+    t_fresh = time.perf_counter() - t0
+    if res_fresh.cache_stats["computed"] != res_fresh.cache_stats["cells"]:
+        raise AssertionError(
+            f"fresh cached pass expected all-miss, got {res_fresh.cache_stats}"
+        )
+
+    # Replay through a NEW SweepCache on the same root: exercises the
+    # manifest-reload (restart) path, not just in-memory state.
+    t0 = time.perf_counter()
+    res_replay = sweep(ens, cache=SweepCache(cache_root), **kwargs)
+    t_replay = time.perf_counter() - t0
+    if res_replay.cache_stats["computed"] != 0:
+        raise AssertionError(
+            f"replay recomputed cells: {res_replay.cache_stats}"
+        )
+
+    blobs = [
+        json.dumps(r.rows(), default=float)
+        for r in (res_uncached, res_fresh, res_replay)
+    ]
+    if len(set(blobs)) != 1:
+        raise AssertionError(
+            "cached sweep rows diverged from the uncached run"
+        )
+    return {
+        "cache_B": B,
+        "cache_cells": res_replay.cache_stats["cells"],
+        "cache_replay_hits": res_replay.cache_stats["hits"],
+        f"sweep_uncached_ensemble{B}_s": t_uncached,
+        f"sweep_cached_fresh_ensemble{B}_s": t_fresh,
+        f"sweep_cached_replay_ensemble{B}_s": t_replay,
+        "sweep_cache_replay_x": t_uncached / t_replay,
+        "sweep_cache_fresh_vs_uncached_x": t_uncached / t_fresh,
+    }
+
+
+def cache_smoke(quick=False, trajectory=False):
+    """CI smoke for the experiment cache.
+
+    Runs the same sweep uncached / cached-fresh / cached-replay, asserts
+    the replay pass computed **zero** cells and all three exports are
+    byte-identical, then merges ``sweep_cache_replay_x`` and the
+    overhead ratio ``sweep_cache_fresh_vs_uncached_x`` into
+    ``results/benchmarks/micro.json``.  The cache itself lands under
+    ``results/benchmarks/cache_smoke/`` so CI can upload its
+    ``manifest.json`` as an artifact next to micro.json.
+    """
+    stats = bench_sweep_cache(quick=quick)
+    for name, val in stats.items():
+        print(f"micro,{name},{val:.6g}")
+    _merge_micro_json(stats)
+    if trajectory:
+        path = record_trajectory(stats)
+        print(f"trajectory appended to {path}")
+    return stats
+
+
 def main(quick=False):
     rows = run(quick=quick)
     print("micro: name,value (us_per_call unless suffixed)")
@@ -728,10 +887,19 @@ if __name__ == "__main__":
         "streaming_resolve_warm_x merged into micro.json)",
     )
     ap.add_argument(
+        "--cache-smoke",
+        action="store_true",
+        help="run only the sweep-cache case (same sweep uncached / "
+        "cached-fresh / cached-replay; replay must compute zero cells, "
+        "exports byte-identical; sweep_cache_replay_x merged into "
+        "micro.json, cache manifest under results/benchmarks/cache_smoke)",
+    )
+    ap.add_argument(
         "--trajectory",
         action="store_true",
-        help="with --engines or --streaming-smoke: also append a "
-        "timestamped entry to the repo-tracked BENCH_micro.json",
+        help="with --engines, --streaming-smoke or --cache-smoke: also "
+        "append a timestamped entry to the repo-tracked BENCH_micro.json "
+        "(backend metadata stamped and schema-enforced on every entry)",
     )
     ap.add_argument(
         "--check-floors",
@@ -739,16 +907,23 @@ if __name__ == "__main__":
         help="compare results/benchmarks/micro.json against "
         "benchmarks/floors.json and exit nonzero on any regression",
     )
+    ap.add_argument(
+        "--floor-keys",
+        default=None,
+        help="with --check-floors: comma-separated subset of floors.json "
+        "keys to gate (CI jobs gate only the keys their benches produce)",
+    )
     args = ap.parse_args()
     if args.check_floors:
         import sys
 
-        failures = check_floors()
+        keys = args.floor_keys.split(",") if args.floor_keys else None
+        failures = check_floors(keys=keys)
         for f in failures:
             print(f"FLOOR REGRESSION: {f}")
         if failures:
             sys.exit(1)
-        print("floors: all pass")
+        print(f"floors: all pass ({'all keys' if keys is None else keys})")
     elif args.batch_smoke:
         batch_smoke(quick=args.quick)
     elif args.sharded_smoke:
@@ -757,5 +932,7 @@ if __name__ == "__main__":
         engines_smoke(quick=args.quick, trajectory=args.trajectory)
     elif args.streaming_smoke:
         streaming_smoke(quick=args.quick, trajectory=args.trajectory)
+    elif args.cache_smoke:
+        cache_smoke(quick=args.quick, trajectory=args.trajectory)
     else:
         main(quick=args.quick)

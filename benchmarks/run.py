@@ -27,6 +27,7 @@ def _benches():
         micro,
         planner_gain,
         table3_delta,
+        trace_scale,
     )
 
     return {
@@ -39,6 +40,7 @@ def _benches():
         "micro": micro.main,
         "planner": planner_gain.main,
         "localsearch": localsearch_gain.main,
+        "trace": trace_scale.main,
     }
 
 
@@ -49,7 +51,7 @@ def main(argv=None):
         "--only",
         default=None,
         help="comma-separated subset: fig3,fig4,table3,fig5,fig6,eps,micro,"
-        "planner,localsearch",
+        "planner,localsearch,trace",
     )
     ap.add_argument(
         "--list", action="store_true", help="list benchmark names and exit"

@@ -1,0 +1,8 @@
+"""K-core OCS coflow scheduling reproduction (JAX/Pallas).
+
+``__version__`` participates in the experiment-fabric code fingerprint
+(`repro.experiments.cache.code_fingerprint`) alongside source digests;
+keep it in sync with ``pyproject.toml``.
+"""
+
+__version__ = "0.3.0"

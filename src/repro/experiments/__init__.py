@@ -5,13 +5,27 @@ package: `ensemble` buckets instances by padded shape and solves the
 ordering LP for each bucket in one batched program, `sweep` executes the
 requested schemes batch-first through the `repro.pipeline` API on top of
 the shared LP phase, and `results` persists flat rows as JSON + CSV.
+
+The experiment fabric on top: `cache` is the content-addressed result
+store (cells keyed by instance + scheme + config + code fingerprint;
+hits short-circuit the pipeline, the manifest survives restarts) and
+`runner` is the sharded executor (per-host instance generation from cell
+specs, `jax.distributed` multi-host behind the single-host interface,
+global row gather back into `results`).
 """
 
+from repro.experiments.cache import SweepCache, code_fingerprint
 from repro.experiments.ensemble import (
     Bucket,
     bucket_shape,
     build_buckets,
     solve_ensemble_lp,
+)
+from repro.experiments.runner import (
+    merge_shards,
+    run_distributed,
+    run_shard,
+    shard_indices,
 )
 from repro.experiments.results import (
     group_mean,
@@ -35,6 +49,12 @@ __all__ = [
     "bucket_shape",
     "build_buckets",
     "solve_ensemble_lp",
+    "SweepCache",
+    "code_fingerprint",
+    "shard_indices",
+    "run_shard",
+    "run_distributed",
+    "merge_shards",
     "group_mean",
     "save_json",
     "save_rows",

@@ -1,0 +1,175 @@
+"""Sharded sweep runner: partition cells across workers, gather rows.
+
+The experiment fabric's execution layer (psim's ``exp_runner`` shape):
+a sweep is declared as a list of **cell specs** — small JSON-able dicts
+of sweep coordinates (seed, K, N, ...) — plus a ``make(spec)`` factory
+that materializes one `CoflowInstance` from a spec.  Each worker builds
+*only its shard's instances* (per-host instance generation: nothing
+ships demand matrices between hosts), runs the ordinary `sweep()` over
+them — single-process multi-device via ``mesh=``, content-cached via
+``cache=`` — and writes one shard artifact; `merge_shards` is the global
+row gather into `repro.experiments.results`.
+
+Three entry points, one sharding contract (shard i of n owns the i-th
+contiguous spec slice, `shard_indices`):
+
+  * `run_shard`        — explicit (shard, num_shards); how a cluster
+    scheduler or a local loop drives workers.
+  * `run_distributed`  — resolves the shard from `jax.distributed`
+    (`repro.launch.mesh.init_distributed` / `process_shard`), runs this
+    host's shard, barriers, and gathers rows on host 0.  Single-process
+    it degenerates to shard 0-of-1 plus an immediate merge, so the same
+    launch line works on a laptop and a fleet.
+  * `merge_shards`     — standalone gather for file-based workflows
+    (shards ran on separate machines sharing a results/cache volume).
+
+Every row carries its global ``cell`` index, so the merged artifact is
+ordered and identified exactly like a single-process sweep's, with
+``instance`` rewritten to the global cell id during the gather.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.experiments.results import results_dir, save_rows
+from repro.experiments.sweep import SweepResult, sweep
+
+__all__ = [
+    "shard_indices",
+    "shard_name",
+    "run_shard",
+    "merge_shards",
+    "run_distributed",
+]
+
+
+def shard_indices(n: int, shard: int, num_shards: int) -> list[int]:
+    """Global indices owned by `shard` of `num_shards`: contiguous,
+    balanced (sizes differ by at most one, `numpy.array_split` semantics —
+    contiguous slices keep the merged row order equal to an unsharded
+    run's)."""
+    if num_shards <= 0:
+        raise ValueError(f"num_shards must be positive, got {num_shards}")
+    if not 0 <= shard < num_shards:
+        raise ValueError(f"shard {shard} out of range for {num_shards}")
+    base, extra = divmod(n, num_shards)
+    start = shard * base + min(shard, extra)
+    stop = start + base + (1 if shard < extra else 0)
+    return list(range(start, stop))
+
+
+def shard_name(name: str, shard: int, num_shards: int) -> str:
+    """Artifact name of one shard's rows (sortable, self-describing)."""
+    return f"{name}.shard{shard:04d}-of-{num_shards:04d}"
+
+
+def run_shard(
+    specs: Sequence[Mapping[str, Any]],
+    make: Callable[[Mapping[str, Any]], Any],
+    *,
+    name: str | None = None,
+    shard: int = 0,
+    num_shards: int = 1,
+    base: str = "ours",
+    **sweep_kwargs,
+) -> SweepResult:
+    """Materialize and sweep this shard's cells; optionally persist rows.
+
+    ``specs[i]`` becomes row metadata (plus ``cell=i``, the global cell
+    id); ``make(specs[i])`` is called only for indices in this shard.
+    All remaining keyword arguments go to `sweep` verbatim (``cache=``
+    makes shard re-runs resumable; a shared cache directory lets any
+    worker reuse any worker's cells).  With ``name`` the shard's rows are
+    saved as ``<shard_name>.json/.csv`` for `merge_shards`.
+    """
+    idx = shard_indices(len(specs), shard, num_shards)
+    instances = [make(specs[i]) for i in idx]
+    metas = [dict(specs[i], cell=i) for i in idx]
+    result = sweep(instances, metas=metas, **sweep_kwargs)
+    if name is not None:
+        save_rows(shard_name(name, shard, num_shards), result.rows(base))
+    return result
+
+
+def merge_shards(
+    name: str, num_shards: int, out: str | None = None
+) -> tuple[str, str]:
+    """Global row gather: concatenate shard artifacts into one
+    ``<name>.json/.csv`` pair, ordered by global cell id.
+
+    ``instance`` (shard-local by construction) is rewritten to the global
+    ``cell`` id so the merged artifact is indistinguishable from a
+    single-process sweep over the full spec list.
+    """
+    import json
+
+    rows: list[dict] = []
+    for shard in range(num_shards):
+        path = os.path.join(
+            results_dir(), f"{shard_name(name, shard, num_shards)}.json"
+        )
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"missing shard artifact {path}; did shard {shard} run?"
+            )
+        with open(path) as f:
+            rows.extend(json.load(f))
+    for row in rows:
+        if "cell" in row:
+            row["instance"] = row["cell"]
+    rows.sort(key=lambda r: r.get("cell", 0))
+    return save_rows(out or name, rows)
+
+
+def run_distributed(
+    specs: Sequence[Mapping[str, Any]],
+    make: Callable[[Mapping[str, Any]], Any],
+    *,
+    name: str,
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    base: str = "ours",
+    **sweep_kwargs,
+) -> SweepResult:
+    """Multi-host sweep behind the single-host interface.
+
+    Brings up `jax.distributed` (no-op single-process), runs this host's
+    shard via `run_shard`, barriers all hosts, and performs the global
+    row gather on host 0.  The launch line is the same on every host::
+
+        python -c "from repro.experiments.runner import run_distributed; ..." \\
+            # with JAX_COORDINATOR_ADDRESS / JAX_NUM_PROCESSES /
+            # JAX_PROCESS_ID set per host (or passed explicitly)
+
+    Hosts must share the results (and, if caching, the cache) directory,
+    or the caller gathers shard artifacts before `merge_shards`.
+    """
+    from repro.launch.mesh import init_distributed, process_shard
+
+    multi = init_distributed(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+    shard, num_shards = process_shard()
+    t0 = time.perf_counter()
+    result = run_shard(
+        specs, make, name=name, shard=shard, num_shards=num_shards,
+        base=base, **sweep_kwargs,
+    )
+    if multi:
+        # Every host must finish writing its shard before host 0 gathers.
+        from jax.experimental import multihost_utils
+
+        multihost_utils.sync_global_devices(f"repro_sweep_gather:{name}")
+    if shard == 0:
+        merge_shards(name, num_shards)
+    print(
+        f"runner: shard {shard}/{num_shards} swept "
+        f"{len(result.records)} cells in {time.perf_counter() - t0:.2f}s"
+    )
+    return result

@@ -12,6 +12,14 @@ runs ordering, allocation and circuit scheduling as one array pipeline;
 the batched path is bit-checked against).  ``mesh=`` shards the batched
 stages' ensemble axis across the mesh's ``data`` axis, bit-identically.
 
+``cache=`` plugs in the content-addressed result cache
+(`repro.experiments.cache.SweepCache`): every (instance, scheme) cell is
+keyed by instance + scheme + config + code fingerprint, cache hits
+short-circuit the LP *and* the batched pipeline for that cell, and only
+missing cells are computed (and stored back).  Re-running an identical
+sweep computes zero cells; a perturbed sweep recomputes exactly the
+changed ones.  `SweepResult.cache_stats` reports the per-call counters.
+
 ``lp_method``:
   * ``"batch"``       — batched subgradient (default; fast, ~1% of optimum).
   * ``"exact"``       — per-instance HiGHS.  Required when downstream
@@ -28,9 +36,12 @@ import dataclasses
 import time
 from typing import Any, Mapping, Sequence
 
+import numpy as np
+
 from repro import pipeline as pipeline_mod
 from repro.core import lp, scheduler, theory
 from repro.core.coflow import CoflowInstance
+from repro.experiments import cache as cache_mod
 from repro.experiments.ensemble import solve_ensemble_lp
 from repro.experiments.results import save_rows, tail_columns
 
@@ -41,16 +52,21 @@ DEFAULT_SCHEMES = pipeline_mod.PAPER_SCHEMES
 
 @dataclasses.dataclass
 class InstanceRecord:
-    """Everything computed for one ensemble member."""
+    """Everything computed for one ensemble member.
+
+    ``lp`` / ``results`` / certificates may be the cached stand-ins
+    (`repro.experiments.cache.CachedLP` etc.) when the cell came out of
+    the sweep cache: they carry exactly the fields the row export reads.
+    """
 
     index: int
     meta: dict[str, Any]
-    lp: lp.LPSolution
-    results: dict[str, scheduler.ScheduleResult]
-    cert_greedy: theory.CertificateReport | None = None
-    cert_reserving: theory.CertificateReport | None = None
+    lp: Any  # lp.LPSolution | cache.CachedLP
+    results: dict[str, Any]  # scheme -> ScheduleResult | CachedScheduleResult
+    cert_greedy: Any | None = None
+    cert_reserving: Any | None = None
 
-    def _base(self, base: str) -> scheduler.ScheduleResult:
+    def _base(self, base: str):
         """Normalization baseline; falls back to the first scheme run when
         the requested one (default "ours") was not part of the sweep."""
         return self.results.get(base) or next(iter(self.results.values()))
@@ -73,6 +89,7 @@ class SweepResult:
     lp_method: str
     lp_time_s: float
     wall_time_s: float
+    cache_stats: dict[str, int] | None = None
 
     def __len__(self) -> int:
         return len(self.records)
@@ -83,7 +100,9 @@ class SweepResult:
         Besides the normalized aggregate/tail ratios, every row carries the
         scheme's absolute tail CCTs (``p95_cct`` / ``p99_cct``, via
         `scheduler.tail_cct`) so figure scripts can plot tails without
-        re-deriving them from raw schedules.
+        re-deriving them from raw schedules.  Rows are derived from the
+        per-cell absolutes only, so cached and freshly computed cells
+        export byte-identically.
         """
         out = []
         for rec in self.records:
@@ -116,6 +135,27 @@ class SweepResult:
         return save_rows(name, self.rows(base))
 
 
+def _cell_payload(results: dict, scheme: str, sol, cert_g, cert_r) -> dict:
+    """The cached absolutes of one (instance, scheme) cell."""
+    res = results[scheme]
+    payload: dict[str, Any] = {
+        "total_weighted_cct": float(res.total_weighted_cct),
+        "ccts": [float(c) for c in res.ccts],
+        "lp_objective": float(sol.objective),
+    }
+    if scheme == "ours" and cert_g is not None:
+        payload["cert_greedy"] = {
+            "approx_ratio": float(cert_g.approx_ratio),
+            "bound": float(cert_g.bound),
+        }
+    if scheme == "ours" and cert_r is not None:
+        payload["cert_reserving"] = {
+            "approx_ratio": float(cert_r.approx_ratio),
+            "ok": bool(cert_r.ok()),
+        }
+    return payload
+
+
 def sweep(
     instances: Sequence[CoflowInstance],
     *,
@@ -132,6 +172,7 @@ def sweep(
     metas: Sequence[Mapping[str, Any]] | None = None,
     validate: bool = True,
     mesh=None,
+    cache: "cache_mod.SweepCache | str | None" = None,
 ) -> SweepResult:
     """Run an ensemble end to end with one shared LP phase.
 
@@ -159,15 +200,27 @@ def sweep(
     (`repro.experiments.results.device_gather`).  Members are
     independent, so a sharded sweep's rows are bit-identical to the
     single-device run; the per-instance ``alloc="loop"`` reference path
-    ignores it.
+    ignores it.  ``mesh`` does not participate in cache keys for the
+    same reason.
+
+    ``cache`` (a `SweepCache` or a cache-root path) keys every
+    (instance, scheme) cell and computes only the misses: the LP phase
+    runs over the instances with at least one missing cell, and each
+    scheme's pipeline runs over exactly the instances missing that
+    scheme.  Stored payloads carry the per-cell absolutes the row export
+    reads, so cached and fresh rows are byte-identical.
+
     With ``certify=True`` the OURS run is certified against the paper's
     Lemma 2-4 / Theorem 1 chain (greedy discipline for the practical
     ratio, reserving for the per-coflow guarantee) — this forces an exact
     LP; the reserving rerun differs from OURS only in circuit discipline,
     so it shares the sweep's ordering pass and batched allocation through
-    the stage cache and re-runs just the circuit stage.
+    the stage cache and re-runs just the circuit stage.  Certificates
+    ride in the OURS cell, so ``certify=True`` with a cache requires
+    ``"ours"`` among the schemes.
     """
     instances = list(instances)
+    schemes = tuple(schemes)
     if metas is None:
         metas = [{} for _ in instances]
     if len(metas) != len(instances):
@@ -181,105 +234,193 @@ def sweep(
         raise ValueError(f"unknown alloc mode {alloc!r}")
     if circuit not in ("batch", "loop"):
         raise ValueError(f"unknown circuit mode {circuit!r}")
+    if isinstance(cache, str):
+        cache = cache_mod.SweepCache(cache)
+    if cache is not None and certify and "ours" not in schemes:
+        raise ValueError(
+            "certify=True with a cache requires 'ours' among the schemes "
+            "(certificates are stored in the OURS cell)"
+        )
 
     t0 = time.perf_counter()
-    if lp_method == "batch":
-        sols = solve_ensemble_lp(
-            instances, iters=lp_iters, m_quantum=m_quantum,
-            p_quantum=p_quantum, mesh=mesh,
-        )
-    elif lp_method == "exact":
-        sols = [lp.solve_exact(inst) for inst in instances]
-    elif lp_method == "subgradient":
-        sols = [lp.solve_subgradient(inst, iters=lp_iters) for inst in instances]
-    else:
-        raise ValueError(f"unknown lp_method {lp_method!r}")
-    lp_time = time.perf_counter() - t0
+    n = len(instances)
 
-    pipes = {
-        s: pipeline_mod.get_pipeline(
-            s, discipline=discipline, circuit_backend=circuit,
+    # ---- cell keying: which (instance, scheme) cells need computing ----
+    # The cache key folds in everything that determines a cell's value;
+    # `validate` and `mesh` are excluded by the bit-identity contracts.
+    keys: dict[tuple[int, str], str] = {}
+    payloads: dict[tuple[int, str], dict] = {}
+    if cache is not None:
+        config_digest = cache_mod.canonical_digest(
+            dict(
+                lp_method=lp_method,
+                lp_iters=lp_iters,
+                m_quantum=m_quantum,
+                p_quantum=p_quantum,
+                discipline=discipline,
+                alloc=alloc,
+                circuit=circuit,
+                circuit_engine=circuit_engine,
+                certify=certify,
+            )
+        )
+        inst_digests = [cache_mod.instance_digest(inst) for inst in instances]
+        schm_digests = {s: cache_mod.scheme_digest(s) for s in schemes}
+        miss: set[tuple[int, str]] = set()
+        for i in range(n):
+            for s in schemes:
+                key = cache_mod.cell_key(
+                    inst_digests[i], schm_digests[s],
+                    config_digest, cache.fingerprint,
+                )
+                keys[(i, s)] = key
+                payload = cache.get(key)
+                if payload is None:
+                    miss.add((i, s))
+                else:
+                    payloads[(i, s)] = payload
+    else:
+        miss = {(i, s) for i in range(n) for s in schemes}
+
+    # ---- LP phase: only instances with at least one missing cell -------
+    need_idx = sorted({i for i, _ in miss})
+    sols_by_idx: dict[int, Any] = {}
+    lp_time = 0.0
+    if need_idx:
+        sub = [instances[i] for i in need_idx]
+        t_lp = time.perf_counter()
+        if lp_method == "batch":
+            sub_sols = solve_ensemble_lp(
+                sub, iters=lp_iters, m_quantum=m_quantum,
+                p_quantum=p_quantum, mesh=mesh,
+            )
+        elif lp_method == "exact":
+            sub_sols = [lp.solve_exact(inst) for inst in sub]
+        elif lp_method == "subgradient":
+            sub_sols = [lp.solve_subgradient(inst, iters=lp_iters) for inst in sub]
+        else:
+            raise ValueError(f"unknown lp_method {lp_method!r}")
+        lp_time = time.perf_counter() - t_lp
+        sols_by_idx = dict(zip(need_idx, sub_sols))
+    elif lp_method not in ("batch", "exact", "subgradient"):
+        raise ValueError(f"unknown lp_method {lp_method!r}")
+
+    # ---- scheme runs over each scheme's missing instances --------------
+    # One stage_cache per distinct instance subset: schemes sharing a
+    # subset (the common all-miss case, and the certify-reserving rerun)
+    # share one ordering pass and one batched allocation, exactly as the
+    # cache-free sweep always did.
+    stage_caches: dict[tuple[int, ...], dict] = {}
+
+    def _run(scheme_key: str, disc: str, idx: list[int]):
+        pipe = pipeline_mod.get_pipeline(
+            scheme_key, discipline=disc, circuit_backend=circuit,
             circuit_engine=circuit_engine,
         )
-        for s in schemes
-    }
-    # One cache for the whole sweep: schemes differing only in their
-    # circuit stage (ours / sunflow_s / bvn_s) share one ordering pass
-    # and one batched allocation instead of recomputing per scheme, and
-    # the certify-reserving rerun below (differs only in discipline)
-    # shares both as well.
-    stage_cache: dict = {}
-    if alloc == "batch":
-        scheme_results = {
-            s: pipe.run_batch(
-                instances,
-                lp_solutions=sols,
-                validate=validate,
-                stage_cache=stage_cache,
-                mesh=mesh,
+        sub = [instances[i] for i in idx]
+        subsols = [sols_by_idx[i] for i in idx]
+        if alloc == "batch":
+            sc = stage_caches.setdefault(tuple(idx), {})
+            res = pipe.run_batch(
+                sub, lp_solutions=subsols, validate=validate,
+                stage_cache=sc, mesh=mesh,
             )
-            for s, pipe in pipes.items()
-        }
-    else:
-        scheme_results = {
-            s: [
+        else:
+            res = [
                 pipe.run(inst, lp_solution=sol, validate=validate)
-                for inst, sol in zip(instances, sols)
+                for inst, sol in zip(sub, subsols)
             ]
-            for s, pipe in pipes.items()
-        }
+        return dict(zip(idx, res))
 
-    ours_results = reserving_results = None
+    scheme_results: dict[str, dict[int, Any]] = {}
+    for s in schemes:
+        idx_s = sorted(i for i, s2 in miss if s2 == s)
+        scheme_results[s] = _run(s, discipline, idx_s) if idx_s else {}
+
+    # ---- certification reruns (exact LP enforced above) ----------------
+    ours_by_idx = reserving_by_idx = None
     if certify:
-        # The certification reruns follow the sweep's own execution mode:
-        # batched reruns share order+allocation through the stage cache;
-        # alloc="loop" keeps every certified quantity on the per-instance
-        # reference path (the batch-free oracle mode must not certify
-        # batched-allocator outputs).
-        def _rerun(pipe):
-            if alloc == "batch":
-                return pipe.run_batch(
-                    instances, lp_solutions=sols, validate=validate,
-                    stage_cache=stage_cache, mesh=mesh,
-                )
-            return [
-                pipe.run(inst, lp_solution=sol, validate=validate)
-                for inst, sol in zip(instances, sols)
-            ]
+        if "ours" in schemes:
+            cert_idx = sorted(i for i, s2 in miss if s2 == "ours")
+            ours_by_idx = scheme_results["ours"]
+        else:
+            cert_idx = list(range(n))
+            ours_by_idx = _run("ours", discipline, cert_idx)
+        reserving_by_idx = (
+            _run("ours", "reserving", cert_idx) if cert_idx else {}
+        )
 
-        ours_results = scheme_results.get("ours")
-        if ours_results is None:
-            ours_results = _rerun(
-                pipeline_mod.get_pipeline(
-                    "ours", discipline=discipline, circuit_backend=circuit,
-                    circuit_engine=circuit_engine,
-                )
-            )
-        reserving_results = _rerun(
-            pipeline_mod.get_pipeline(
-                "ours", discipline="reserving", circuit_backend=circuit,
-                circuit_engine=circuit_engine,
-            )
-        )
+    # ---- assemble records (cached cells -> stand-ins), store misses ----
     records = []
-    for i, (inst, sol, meta) in enumerate(zip(instances, sols, metas)):
-        results = {s: scheme_results[s][i] for s in schemes}
-        rec = InstanceRecord(
-            index=i, meta=dict(meta), lp=sol, results=results
-        )
+    for i, (inst, meta) in enumerate(zip(instances, metas)):
+        results: dict[str, Any] = {}
+        cached_lp_obj = None
+        cert_g = cert_r = None
+        for s in schemes:
+            if (i, s) in miss:
+                results[s] = scheme_results[s][i]
+            else:
+                p = payloads[(i, s)]
+                results[s] = cache_mod.CachedScheduleResult(
+                    scheme=s,
+                    total_weighted_cct=p["total_weighted_cct"],
+                    ccts=np.asarray(p["ccts"], dtype=np.float64),
+                )
+                cached_lp_obj = p["lp_objective"]
+        sol = sols_by_idx.get(i)
         if certify:
-            res = ours_results[i]
-            rec.cert_greedy = theory.certify(
-                inst, res.order, sol.completion, res.allocation, res.ccts
-            )
-            res_r = reserving_results[i]
-            rec.cert_reserving = theory.certify(
-                inst, res_r.order, sol.completion, res_r.allocation, res_r.ccts
-            )
+            if ours_by_idx is not None and i in ours_by_idx:
+                res = ours_by_idx[i]
+                cert_g = theory.certify(
+                    inst, res.order, sol.completion, res.allocation, res.ccts
+                )
+                res_r = reserving_by_idx[i]
+                cert_r = theory.certify(
+                    inst, res_r.order, sol.completion, res_r.allocation,
+                    res_r.ccts,
+                )
+            else:  # OURS cell was cached — certificates ride in its payload
+                p = payloads[(i, "ours")]
+                cg, cr = p.get("cert_greedy"), p.get("cert_reserving")
+                if cg is not None:
+                    cert_g = cache_mod.CachedCertificate(
+                        approx_ratio=cg["approx_ratio"], bound=cg["bound"]
+                    )
+                if cr is not None:
+                    cert_r = cache_mod.CachedCertificate(
+                        approx_ratio=cr["approx_ratio"], bound=0.0,
+                        certified=cr["ok"],
+                    )
+        rec = InstanceRecord(
+            index=i,
+            meta=dict(meta),
+            lp=sol if sol is not None else cache_mod.CachedLP(cached_lp_obj),
+            results=results,
+            cert_greedy=cert_g,
+            cert_reserving=cert_r,
+        )
         records.append(rec)
+        if cache is not None:
+            for s in schemes:
+                if (i, s) in miss:
+                    cache.put(
+                        keys[(i, s)],
+                        _cell_payload(results, s, sol, cert_g, cert_r),
+                        meta={"scheme": s},
+                    )
+    cache_stats = None
+    if cache is not None:
+        cache.flush()
+        cache_stats = dict(
+            cells=n * len(schemes),
+            hits=n * len(schemes) - len(miss),
+            misses=len(miss),
+            computed=len(miss),
+        )
     return SweepResult(
         records=records,
         lp_method=lp_method,
         lp_time_s=lp_time,
         wall_time_s=time.perf_counter() - t0,
+        cache_stats=cache_stats,
     )

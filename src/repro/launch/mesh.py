@@ -20,6 +20,8 @@ __all__ = [
     "data_axis_size",
     "data_sharding",
     "place",
+    "init_distributed",
+    "process_shard",
 ]
 
 
@@ -69,6 +71,49 @@ def data_sharding(mesh):
     from jax.sharding import NamedSharding, PartitionSpec
 
     return NamedSharding(mesh, PartitionSpec("data"))
+
+
+def init_distributed(
+    coordinator_address: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    local_device_ids=None,
+) -> bool:
+    """Bring up `jax.distributed` for a multi-host sweep; returns whether
+    a multi-process runtime is active.
+
+    The single-process degenerate case (no coordinator, ``num_processes``
+    unset or 1) is a no-op returning False, so the sharded runner
+    (`repro.experiments.runner`) can call this unconditionally: one
+    entrypoint covers the laptop run and the fleet launch.  Re-initializing
+    an already-initialized runtime is tolerated (idempotent per process).
+    Arguments default to the ``JAX_COORDINATOR_ADDRESS`` /
+    ``JAX_NUM_PROCESSES`` / ``JAX_PROCESS_ID`` environment contract of
+    `jax.distributed.initialize`.
+    """
+    if coordinator_address is None and num_processes in (None, 1):
+        return jax.process_count() > 1
+    try:
+        jax.distributed.initialize(
+            coordinator_address=coordinator_address,
+            num_processes=num_processes,
+            process_id=process_id,
+            local_device_ids=local_device_ids,
+        )
+    except RuntimeError as e:  # already initialized: keep the first bring-up
+        if "already initialized" not in str(e).lower():
+            raise
+    return jax.process_count() > 1
+
+
+def process_shard() -> tuple[int, int]:
+    """This host's (shard, num_shards) under the distributed runtime.
+
+    ``(0, 1)`` on a single process — the runner's sharding contract is
+    identical either way: shard i of n computes the i-th contiguous cell
+    slice and writes one shard artifact for the global row gather.
+    """
+    return int(jax.process_index()), int(jax.process_count())
 
 
 def place(x, sharding=None):

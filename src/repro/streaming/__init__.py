@@ -10,12 +10,20 @@ already in flight are carried into the next calendar — preempted (with
 a fresh reconfiguration delta) or committed as phantom busy flows.
 
   * `repro.streaming.pool`    — `SlotPool`, the bounded ring-buffer of
-    scheduler slots with a FIFO admission queue;
+    scheduler slots with a pluggable admission policy (``"fifo"`` /
+    ``"weighted"`` / ``"size_aware"``) deciding who gets a slot under
+    contention;
   * `repro.streaming.service` — `stream()` (the driver, `sweep()`'s
     online sibling), `StreamResult` / `EpochRecord` result types.
 """
 
-from repro.streaming.pool import SlotPool
+from repro.streaming.pool import ADMISSION_POLICIES, SlotPool
 from repro.streaming.service import EpochRecord, StreamResult, stream
 
-__all__ = ["SlotPool", "EpochRecord", "StreamResult", "stream"]
+__all__ = [
+    "ADMISSION_POLICIES",
+    "SlotPool",
+    "EpochRecord",
+    "StreamResult",
+    "stream",
+]

@@ -2,27 +2,68 @@
 
 The pool bounds the scheduler's working set: at most `size` coflows are
 *active* (hold a slot and participate in re-solves) at any time; the
-rest wait in a FIFO admission queue.  Slots are assigned in ring order
+rest wait in an admission queue.  Slots are assigned in ring order
 (a rotating next-slot pointer, so slot ids churn through the buffer
 instead of piling up at index 0) and freed when a coflow's residual
 demand reaches zero.  Slot ids are the key for per-pair warm-start
 memory (`service._WarmState`): bounded state for an unbounded stream.
+
+Admission is **pluggable** (ROADMAP streaming follow-on b): when slots
+are scarce the ``policy`` decides which queued coflow is admitted next —
+
+  * ``"fifo"``       — arrival order (the default, and the only policy
+    that preserves offline-replay parity);
+  * ``"weighted"``   — highest weight first: under contention the
+    scheduler works on the coflows the Sum w_m T_m objective charges
+    most for waiting;
+  * ``"size_aware"`` — smallest total demand first (shortest-job-first
+    flavored): small coflows drain slots quickly, cutting queue waits.
+
+Ties (equal weight / size) fall back to arrival order, so every policy
+is deterministic.  Policies reorder only the queue→slot assignment;
+slot accounting, ring rotation and warm-start semantics are identical.
 """
 
 from __future__ import annotations
 
 from collections import deque
 
-__all__ = ["SlotPool"]
+__all__ = ["ADMISSION_POLICIES", "SlotPool"]
+
+ADMISSION_POLICIES = ("fifo", "weighted", "size_aware")
 
 
 class SlotPool:
-    """Bounded slot pool with ring-order assignment and a FIFO queue."""
+    """Bounded slot pool with ring-order assignment and a policy queue.
 
-    def __init__(self, size: int):
+    ``weights`` / ``sizes`` index by *global coflow id* and are required
+    by the ``"weighted"`` / ``"size_aware"`` policies respectively (the
+    streaming driver passes the instance's weight vector and per-coflow
+    total demands).
+    """
+
+    def __init__(
+        self,
+        size: int,
+        policy: str = "fifo",
+        weights=None,
+        sizes=None,
+    ):
         if size <= 0:
             raise ValueError(f"pool size must be positive, got {size}")
+        if policy not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"unknown admission policy {policy!r}; "
+                f"choose from {ADMISSION_POLICIES}"
+            )
+        if policy == "weighted" and weights is None:
+            raise ValueError("policy='weighted' needs per-coflow weights")
+        if policy == "size_aware" and sizes is None:
+            raise ValueError("policy='size_aware' needs per-coflow sizes")
         self.size = size
+        self.policy = policy
+        self._weights = weights
+        self._sizes = sizes
         self._slot_coflow = [-1] * size  # slot -> global coflow id
         self._slot_of: dict[int, int] = {}  # global coflow id -> slot
         self._next = 0  # ring pointer: first slot probed on admission
@@ -51,18 +92,34 @@ class SlotPool:
         return sorted(self._slot_of)
 
     def push(self, coflows) -> None:
-        """Enqueue newly arrived coflows (FIFO, caller supplies order)."""
+        """Enqueue newly arrived coflows (arrival order, caller supplies)."""
         self.queue.extend(int(m) for m in coflows)
+
+    def _pick(self) -> int:
+        """Queue position of the next coflow to admit under the policy."""
+        if self.policy == "fifo":
+            return 0
+        if self.policy == "weighted":
+            # max weight; tie -> earliest arrival (first queue position).
+            best = max(range(len(self.queue)),
+                       key=lambda i: (self._weights[self.queue[i]], -i))
+            return best
+        # size_aware: min total demand; tie -> earliest arrival.
+        return min(range(len(self.queue)),
+                   key=lambda i: (self._sizes[self.queue[i]], i))
 
     def admit_waiting(self) -> list[int]:
         """Assign queued coflows to free slots in ring order.
 
-        Returns the admitted global ids, in admission order.  Stops when
+        Returns the admitted global ids, in admission order (which is
+        the policy's order, not necessarily arrival order).  Stops when
         the queue or the free slots run out.
         """
         admitted = []
         while self.queue and self.num_free:
-            m = self.queue.popleft()
+            pos = self._pick()
+            m = self.queue[pos]
+            del self.queue[pos]
             s = self._next
             while self._slot_coflow[s] != -1:
                 s = (s + 1) % self.size

@@ -98,6 +98,7 @@ class StreamResult:
     epochs: list[EpochRecord]
     lp_time_s: float
     wall_time_s: float
+    admission_policy: str = "fifo"  # slot-pool policy (see SlotPool)
 
     @property
     def realized_weighted_cct(self) -> float:
@@ -169,6 +170,7 @@ class StreamResult:
             preempt=self.preempt,
             warm_start=self.warm_start,
             pool_size=self.pool_size,
+            admission_policy=self.admission_policy,
             num_coflows=int(self.weights.shape[0]),
             realized_weighted_cct=self.realized_weighted_cct,
             num_resolves=self.num_resolves,
@@ -291,6 +293,7 @@ def stream(
     preempt: bool = True,
     warm_start: bool = True,
     validate: bool = True,
+    admission: str = "fifo",
 ) -> StreamResult:
     """Schedule `instance`'s coflows online, admitting by release time.
 
@@ -299,7 +302,10 @@ def stream(
     process onto any workload).  ``lp_method`` is ``"batch"`` (the
     warm-startable subgradient solver — the production path) or
     ``"exact"`` (per-epoch HiGHS; deterministic, used by the parity
-    tests).  See the module docstring for the event-loop semantics; with
+    tests).  ``admission`` picks the slot-pool policy under contention
+    (``"fifo"`` / ``"weighted"`` / ``"size_aware"``, see
+    `repro.streaming.pool.SlotPool`); it only matters when ``pool_size``
+    binds.  See the module docstring for the event-loop semantics; with
     ``n_batches=1`` and ``preempt=False`` the run replays the offline
     `Pipeline.run_batch` bit for bit.
     """
@@ -340,11 +346,19 @@ def stream(
         admission=np.zeros(M), finish=np.zeros(M),
         epochs=[], lp_time_s=0.0, wall_time_s=0.0,
     )
+    result.admission_policy = admission
     if M == 0:
         result.wall_time_s = time.perf_counter() - t_start
         return result
 
-    pool = SlotPool(S)
+    pool = SlotPool(
+        S,
+        policy=admission,
+        weights=result.weights,
+        sizes=np.asarray(instance.demands, dtype=np.float64)
+        .reshape(M, -1)
+        .sum(axis=1),
+    )
     warm = _WarmState(S)
     residual = np.asarray(instance.demands, dtype=np.float64).copy()
     finished = np.zeros(M, dtype=bool)

@@ -1,0 +1,147 @@
+"""Sharded-runner tests: the multi-host execution layer of the fabric.
+
+The contract under test: a sweep declared as (cell specs, `make`)
+partitions across workers by contiguous balanced shards, each worker
+materializes **only its own** instances (per-host generation), and the
+merged shard artifacts are byte-identical to one unsharded sweep over
+the full spec list.  `run_distributed` must degenerate to exactly that
+single sweep in a single-process session, and a cache directory shared
+between shards must let a re-run of any shard compute zero cells.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.experiments import (
+    merge_shards,
+    run_distributed,
+    run_shard,
+    shard_indices,
+    sweep,
+)
+from repro.experiments.runner import shard_name
+from repro.launch.mesh import init_distributed, process_shard
+from repro.traffic.instances import random_instance
+
+SPECS = [
+    {"seed": 50 + i, "num_coflows": 8 + 2 * (i % 3), "num_ports": 4}
+    for i in range(7)
+]
+
+
+def _make(spec):
+    return random_instance(
+        num_coflows=spec["num_coflows"],
+        num_ports=spec["num_ports"],
+        num_cores=2,
+        seed=spec["seed"],
+    )
+
+
+_KW = dict(schemes=("ours", "wspt_order"), lp_method="exact", validate=False)
+
+
+class TestShardIndices:
+    def test_partition_is_exact_and_contiguous(self):
+        for n in (1, 5, 7, 16):
+            for k in (1, 2, 3, 5):
+                chunks = [shard_indices(n, s, k) for s in range(k)]
+                assert [i for c in chunks for i in c] == list(range(n))
+                sizes = [len(c) for c in chunks]
+                assert max(sizes) - min(sizes) <= 1
+
+    def test_rejects_bad_shards(self):
+        with pytest.raises(ValueError):
+            shard_indices(4, 2, 2)
+        with pytest.raises(ValueError):
+            shard_indices(4, 0, 0)
+
+    def test_shard_name_sortable(self):
+        names = [shard_name("x", s, 12) for s in range(12)]
+        assert names == sorted(names)
+
+
+class TestRunShard:
+    def test_per_host_generation(self):
+        """make() is called only for this shard's specs."""
+        made = []
+
+        def counting_make(spec):
+            made.append(spec["seed"])
+            return _make(spec)
+
+        run_shard(SPECS, counting_make, shard=1, num_shards=3, **_KW)
+        assert made == [SPECS[i]["seed"] for i in shard_indices(7, 1, 3)]
+
+    def test_rows_carry_global_cell_ids(self):
+        res = run_shard(SPECS, _make, shard=2, num_shards=3, **_KW)
+        cells = sorted({r["cell"] for r in res.rows()})
+        assert cells == shard_indices(7, 2, 3)
+
+    def test_merge_matches_unsharded(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        for shard in range(3):
+            run_shard(
+                SPECS, _make, name="m", shard=shard, num_shards=3, **_KW
+            )
+        jpath, _ = merge_shards("m", 3)
+
+        ref = sweep(
+            [_make(s) for s in SPECS],
+            metas=[dict(s, cell=i) for i, s in enumerate(SPECS)],
+            **_KW,
+        )
+        with open(jpath) as f:
+            merged = json.load(f)
+        assert json.dumps(merged) == json.dumps(
+            json.loads(json.dumps(ref.rows(), default=float))
+        )
+
+    def test_merge_missing_shard_raises(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        run_shard(SPECS, _make, name="q", shard=0, num_shards=2, **_KW)
+        with pytest.raises(FileNotFoundError):
+            merge_shards("q", 2)
+
+    def test_shared_cache_across_shards(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        cache = str(tmp_path / "cache")
+        for shard in range(2):
+            run_shard(
+                SPECS, _make, shard=shard, num_shards=2, cache=cache, **_KW
+            )
+        # Any worker re-running any shard hits the shared store.
+        res = run_shard(
+            SPECS, _make, shard=1, num_shards=2, cache=cache, **_KW
+        )
+        assert res.cache_stats["computed"] == 0
+        # ... as does an unsharded sweep over the same cells.
+        full = sweep(
+            [_make(s) for s in SPECS],
+            metas=[dict(s, cell=i) for i, s in enumerate(SPECS)],
+            cache=cache,
+            **_KW,
+        )
+        assert full.cache_stats["computed"] == 0
+
+
+class TestDistributed:
+    def test_single_process_is_noop_init(self):
+        assert init_distributed() is False
+        assert process_shard() == (0, 1)
+
+    def test_degenerates_to_single_sweep(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        run_distributed(SPECS, _make, name="d", **_KW)
+        ref = sweep(
+            [_make(s) for s in SPECS],
+            metas=[dict(s, cell=i) for i, s in enumerate(SPECS)],
+            **_KW,
+        )
+        with open(os.path.join(str(tmp_path), "d.json")) as f:
+            merged = json.load(f)
+        assert json.dumps(merged) == json.dumps(
+            json.loads(json.dumps(ref.rows(), default=float))
+        )

@@ -356,3 +356,125 @@ def test_stream_commits_in_flight_circuits_across_epochs():
     assert busy_epochs, "expected at least one epoch with phantom circuits"
     lb = lp.solve_exact(inst).objective
     assert res.realized_weighted_cct <= _bound(inst) * lb * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Pluggable admission policies (fifo / weighted / size_aware)
+# ---------------------------------------------------------------------------
+
+
+def _contention_instance(weights, demands_scale):
+    """M coflows contending for ONE port pair on one unit-rate core:
+    with pool_size=1 the admission policy fully decides service order."""
+    M = len(weights)
+    demands = np.zeros((M, 2, 2))
+    for m, d in enumerate(demands_scale):
+        demands[m, 0, 1] = d
+    return CoflowInstance(
+        demands=demands,
+        weights=np.asarray(weights, dtype=np.float64),
+        releases=np.zeros(M),
+        rates=np.ones(1),
+        delta=0.0,
+    )
+
+
+def test_slot_pool_policy_validation():
+    with pytest.raises(ValueError):
+        SlotPool(2, policy="lifo")
+    with pytest.raises(ValueError):
+        SlotPool(2, policy="weighted")  # needs weights
+    with pytest.raises(ValueError):
+        SlotPool(2, policy="size_aware")  # needs sizes
+    from repro.streaming import ADMISSION_POLICIES
+
+    assert set(ADMISSION_POLICIES) == {"fifo", "weighted", "size_aware"}
+
+
+def test_slot_pool_weighted_admits_heaviest_first():
+    w = np.array([1.0, 9.0, 3.0, 9.0])
+    pool = SlotPool(1, policy="weighted", weights=w)
+    pool.push([0, 1, 2, 3])
+    assert pool.admit_waiting() == [1]  # heaviest
+    pool.release(1)
+    # Tie (ids 3 vs nothing equal... queue [0,2,3]): 3 has weight 9.
+    assert pool.admit_waiting() == [3]
+    pool.release(3)
+    assert pool.admit_waiting() == [2]
+
+
+def test_slot_pool_weighted_tie_breaks_by_arrival():
+    w = np.array([5.0, 5.0, 5.0])
+    pool = SlotPool(1, policy="weighted", weights=w)
+    pool.push([2, 0, 1])  # arrival order != id order
+    assert pool.admit_waiting() == [2]
+    pool.release(2)
+    assert pool.admit_waiting() == [0]
+
+
+def test_slot_pool_size_aware_admits_smallest_first():
+    sizes = np.array([30.0, 4.0, 11.0])
+    pool = SlotPool(2, policy="size_aware", sizes=sizes)
+    pool.push([0, 1, 2])
+    assert pool.admit_waiting() == [1, 2]
+    pool.release(1)
+    assert pool.admit_waiting() == [0]
+
+
+def test_fifo_policy_preserves_replay_parity():
+    # Policy plumbing must not disturb the offline-parity anchor.
+    inst = random_instance(
+        num_coflows=7, num_ports=3, num_cores=2, seed=31
+    )
+    pipe = get_pipeline("ours", discipline="greedy", lp_method="exact")
+    off = pipe.run_batch([inst], lp_solutions=[lp.solve_exact(inst)])[0]
+    rep = stream(
+        inst, lp_method="exact", n_batches=1, preempt=False, admission="fifo"
+    )
+    assert rep.admission_policy == "fifo"
+    assert np.array_equal(rep.finish, off.ccts)
+    assert rep.realized_weighted_cct == off.total_weighted_cct
+
+
+def test_weighted_admission_beats_fifo_under_contention():
+    # One heavy coflow stuck behind two light ones: fifo serves arrival
+    # order, weighted pulls the heavy one forward — realized weighted
+    # CCT must strictly improve on this crafted case.
+    inst = _contention_instance(
+        weights=[1.0, 50.0, 1.0], demands_scale=[10.0, 10.0, 10.0]
+    )
+    kw = dict(lp_method="exact", n_batches=1, pool_size=1, preempt=False)
+    fifo = stream(inst, admission="fifo", **kw)
+    wgt = stream(inst, admission="weighted", **kw)
+    assert wgt.admission_policy == "weighted"
+    assert (
+        wgt.realized_weighted_cct < fifo.realized_weighted_cct
+    ), "weighted admission should prioritize the heavy coflow"
+    # The heavy coflow (id 1) is admitted first under weighted...
+    assert wgt.admission[1] <= wgt.admission[0]
+    assert wgt.admission[1] <= wgt.admission[2]
+    # ... and both runs stay within the paper bound.
+    lb = lp.solve_exact(inst).objective
+    for res in (fifo, wgt):
+        assert res.realized_weighted_cct <= _bound(inst) * lb * (1 + 1e-9)
+
+
+def test_size_aware_admission_drains_small_coflows_first():
+    inst = _contention_instance(
+        weights=[1.0, 1.0, 1.0], demands_scale=[30.0, 30.0, 3.0]
+    )
+    kw = dict(lp_method="exact", n_batches=1, pool_size=1, preempt=False)
+    fifo = stream(inst, admission="fifo", **kw)
+    sz = stream(inst, admission="size_aware", **kw)
+    # The tiny coflow (id 2) jumps the queue and finishes first.
+    assert sz.admission[2] <= sz.admission[0]
+    assert sz.finish[2] < min(sz.finish[0], sz.finish[1])
+    # SJF-flavored admission lowers the (unweighted) objective here.
+    assert sz.realized_weighted_cct <= fifo.realized_weighted_cct
+    assert sz.summary()["admission_policy"] == "size_aware"
+
+
+def test_unknown_admission_policy_rejected():
+    inst = random_instance(num_coflows=4, num_ports=3, num_cores=1, seed=3)
+    with pytest.raises(ValueError):
+        stream(inst, lp_method="exact", pool_size=2, admission="lifo")

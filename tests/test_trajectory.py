@@ -1,0 +1,69 @@
+"""BENCH_micro.json trajectory-schema tests (satellite a).
+
+Every committed trajectory entry must carry the backend metadata that
+makes cross-machine perf numbers interpretable (`TRAJECTORY_META`):
+`record_trajectory` stamps it automatically and re-validates the whole
+file on every append, so a malformed entry can never land — and the
+file as committed in this repo must already pass.
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.micro import (  # noqa: E402
+    TRAJECTORY_META,
+    backend_metadata,
+    record_trajectory,
+    validate_trajectory,
+)
+
+
+def test_backend_metadata_covers_required_keys():
+    meta = backend_metadata()
+    assert set(TRAJECTORY_META) <= set(meta)
+    assert meta["num_devices"] >= 1
+
+
+def test_committed_trajectory_file_passes_schema():
+    path = os.path.join(_ROOT, "BENCH_micro.json")
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_trajectory(doc, path) == []
+    assert doc["entries"], "trajectory should not be empty"
+
+
+def test_record_trajectory_stamps_metadata(tmp_path):
+    path = str(tmp_path / "BENCH_micro.json")
+    record_trajectory({"some_speedup_x": 2.0}, path=path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == "bench-micro-trajectory-v1"
+    [entry] = doc["entries"]
+    for key in TRAJECTORY_META:
+        assert key in entry["stats"]
+    assert entry["stats"]["some_speedup_x"] == 2.0
+
+
+def test_record_trajectory_rejects_malformed_existing_entry(tmp_path):
+    path = str(tmp_path / "BENCH_micro.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "schema": "bench-micro-trajectory-v1",
+                "entries": [{"timestamp": "t0", "stats": {"x": 1.0}}],
+            },
+            f,
+        )
+    with pytest.raises(AssertionError, match="missing metadata"):
+        record_trajectory({"y": 1.0}, path=path)
+
+
+def test_validate_trajectory_flags_bad_schema():
+    doc = {"schema": "nope", "entries": []}
+    assert validate_trajectory(doc) != []
