@@ -24,6 +24,10 @@ online streaming service on a small Poisson-arrival trace: single-batch
 replay parity against the offline pipeline and the (8K+1) bound are
 asserted, and the warm-start re-solve speedup
 (``streaming_resolve_warm_x``) joins the same artifacts.
+``--refine-smoke`` runs the batched candidate-search refinement against
+the per-candidate Python loop on the mixed-shape ensemble (bit-parity of
+winners asserted, ``run_batch(ours_ls, require_batch=True)`` guarded
+against a sequential fallback) and merges ``refine_batch_speedup_x``.
 ``--cache-smoke`` runs one sweep uncached / cached-fresh / cached-replay
 (replay must compute zero cells, exports byte-identical) and merges the
 replay speedup + cache-overhead ratio into the artifact, leaving the
@@ -464,6 +468,9 @@ def run(quick=False):
         (k, v) for k, v in estats.items() if isinstance(v, (int, float))
     )
 
+    # Batched candidate-search refinement vs the per-candidate loop.
+    rows.extend(bench_refine(quick=quick).items())
+
     # Sharded-ensemble sweep vs single device (data-axis NamedSharding;
     # 1-device meshes still exercise the sharded code path).
     rows.extend(bench_sharded_sweep(quick=quick).items())
@@ -744,6 +751,127 @@ def streaming_smoke(quick=False, trajectory=False):
     return stats
 
 
+def bench_refine(quick=False, ensemble_size=32, lp_iters=300):
+    """Batched candidate-search refinement vs the per-candidate Python loop.
+
+    The mixed-shape micro ensemble's LP orders are refined twice with the
+    same `RefineSpec`: once through `refine_batch_arrays` (candidate
+    orders as extra `EnsembleBatch` member rows, one batched alloc+circuit
+    pass per round) and once through the sequential oracle
+    (`refine_sequential` over `evaluate_order` — one full per-instance
+    allocation + circuit pass per candidate, the shape
+    `core.localsearch.refine_order` always had).  Winners must be
+    **bit-identical** — same refined orders, same objectives, same
+    evaluation counts — before any timing is reported; the refined
+    ensemble is then pushed through ``Pipeline.run_batch(ours_ls,
+    require_batch=True)`` so a silent fallback to the sequential loop
+    fails the smoke rather than skewing the numbers.
+
+    ``refine_batch_speedup_x`` is sequential wall / warm batched wall —
+    the quality-vs-compute dial's price tag, gated by
+    ``benchmarks/floors.json``.
+    """
+    from repro.core.localsearch import evaluate_order
+    from repro.experiments import solve_ensemble_lp
+    from repro.pipeline import ensemble_batch as eb
+    from repro.pipeline.refine import (
+        RefineSpec,
+        refine_batch_arrays,
+        refine_sequential,
+    )
+
+    B = 8 if quick else ensemble_size
+    iters = 100 if quick else lp_iters
+    rng = np.random.default_rng(4)
+    ens = [
+        random_instance(
+            num_coflows=int(rng.integers(20, 52)),
+            num_ports=int(rng.integers(4, 12)),
+            num_cores=int(rng.integers(2, 5)),
+            seed=400 + s,
+        )
+        for s in range(B)
+    ]
+    sols = solve_ensemble_lp(
+        ens, iters=iters, m_quantum=None, p_quantum=None
+    )
+    orders = [sol.order() for sol in sols]
+    spec = RefineSpec()  # the registry's OURS+LS dial
+    batch = eb.build_ensemble_batch(ens, with_lp_arrays=False)
+    padded = batch.pad_orders(orders)
+
+    t0 = time.perf_counter()
+    refine_batch_arrays(batch, padded, spec)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = refine_batch_arrays(batch, padded, spec)
+    t_warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    seq = [
+        refine_sequential(
+            orders[b], spec,
+            lambda o, inst=ens[b]: evaluate_order(inst, o),
+        )
+        for b in range(B)
+    ]
+    t_seq = time.perf_counter() - t0
+
+    for b, (o2, cur, base, _r, _e) in enumerate(seq):
+        M = ens[b].num_coflows
+        if not (
+            np.array_equal(out.orders[b, :M], o2)
+            and out.objective[b] == cur
+            and out.base_objective[b] == base
+        ):
+            raise AssertionError(
+                f"batched refinement diverged from the sequential oracle "
+                f"on instance {b}"
+            )
+    if out.evaluations != sum(e for *_, e in seq):
+        raise AssertionError(
+            f"evaluation counts diverged: batched {out.evaluations} vs "
+            f"sequential {sum(e for *_, e in seq)}"
+        )
+
+    # End-to-end gate: OURS+LS through run_batch must stay on the batched
+    # refinement path (require_batch errors on the sequential fallback).
+    get_pipeline("ours_ls").run_batch(
+        ens, lp_solutions=sols, validate=False, require_batch=True
+    )
+    return {
+        "refine_B": B,
+        "refine_rounds": spec.rounds,
+        "refine_candidates": spec.candidates,
+        "refine_evaluations": out.evaluations,
+        "refine_improved_frac": float(out.improved.mean()),
+        f"refine_seq_ensemble{B}_s": t_seq,
+        f"refine_batch_cold_ensemble{B}_s": t_cold,
+        f"refine_batch_warm_ensemble{B}_s": t_warm,
+        "refine_batch_speedup_x": t_seq / t_warm,
+    }
+
+
+def refine_smoke(quick=False, trajectory=False):
+    """CI smoke for batched candidate-search refinement.
+
+    Asserts batched-vs-sequential bit-parity (orders, objectives and
+    evaluation counts) and that ``run_batch(ours_ls,
+    require_batch=True)`` stays on the batched path, then merges
+    ``refine_batch_speedup_x`` (+ raw timings) into
+    ``results/benchmarks/micro.json``; with ``trajectory=True`` the
+    stats also land in the repo-tracked ``BENCH_micro.json``.
+    """
+    stats = bench_refine(quick=quick)
+    for name, val in stats.items():
+        print(f"micro,{name},{val:.6g}")
+    _merge_micro_json(stats)
+    if trajectory:
+        path = record_trajectory(stats)
+        print(f"trajectory appended to {path}")
+    return stats
+
+
 def bench_sweep_cache(quick=False, ensemble_size=12, lp_iters=200):
     """Content-addressed sweep cache: replay speedup + byte-identity.
 
@@ -887,6 +1015,14 @@ if __name__ == "__main__":
         "streaming_resolve_warm_x merged into micro.json)",
     )
     ap.add_argument(
+        "--refine-smoke",
+        action="store_true",
+        help="run only the batched-refinement case (candidate search as "
+        "extra EnsembleBatch member rows vs the per-candidate Python "
+        "loop; bit-parity and the batched run_batch path asserted, "
+        "refine_batch_speedup_x merged into micro.json)",
+    )
+    ap.add_argument(
         "--cache-smoke",
         action="store_true",
         help="run only the sweep-cache case (same sweep uncached / "
@@ -897,9 +1033,10 @@ if __name__ == "__main__":
     ap.add_argument(
         "--trajectory",
         action="store_true",
-        help="with --engines, --streaming-smoke or --cache-smoke: also "
-        "append a timestamped entry to the repo-tracked BENCH_micro.json "
-        "(backend metadata stamped and schema-enforced on every entry)",
+        help="with --engines, --streaming-smoke, --refine-smoke or "
+        "--cache-smoke: also append a timestamped entry to the "
+        "repo-tracked BENCH_micro.json (backend metadata stamped and "
+        "schema-enforced on every entry)",
     )
     ap.add_argument(
         "--check-floors",
@@ -932,6 +1069,8 @@ if __name__ == "__main__":
         engines_smoke(quick=args.quick, trajectory=args.trajectory)
     elif args.streaming_smoke:
         streaming_smoke(quick=args.quick, trajectory=args.trajectory)
+    elif args.refine_smoke:
+        refine_smoke(quick=args.quick, trajectory=args.trajectory)
     elif args.cache_smoke:
         cache_smoke(quick=args.quick, trajectory=args.trajectory)
     else:

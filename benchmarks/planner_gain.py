@@ -2,7 +2,12 @@
 
 Plans one training step's inter-pod gradient exchange (ring coflows from
 real architecture parameter trees, MoE all-to-alls for the MoE archs) over
-K parallel OCS planes with Algorithm 1 vs a FIFO/load-only baseline."""
+K parallel OCS planes with Algorithm 1 vs a FIFO/load-only baseline, then
+re-plans with batched candidate-search refinement (`repro.pipeline.refine`
+through ``plan(refine=...)``) to report what the quality-vs-compute dial
+buys on top of the paper-faithful plan.  Refinement only accepts
+improving orders, so the refined plan is never worse and keeps the
+(8K+1) guarantee."""
 
 from __future__ import annotations
 
@@ -12,12 +17,14 @@ from benchmarks.common import save_json
 from repro.collectives.planner import buckets_from_params, plan
 from repro.configs import get_arch
 from repro.models.model import build_model
+from repro.pipeline.spec import RefineSpec
 
 ARCHS = ["gemma3-1b", "phi3-medium-14b", "qwen3-moe-235b-a22b"]
 
 
 def run(quick=False):
     archs = ARCHS[:1] if quick else ARCHS
+    refine = RefineSpec(rounds=1 if quick else 2)
     rows = []
     for name in archs:
         cfg = get_arch(name)
@@ -33,12 +40,13 @@ def run(quick=False):
             a2a = [
                 GradientBucket(f"a2a_l{i}", 64 << 20, i / 8) for i in range(8)
             ]
-        p = plan(
-            buckets,
+        kwargs = dict(
             num_pods=4,
             plane_rates_gbps=(25.0, 50.0, 50.0, 100.0),
             a2a_buckets=a2a,
         )
+        p = plan(buckets, **kwargs)
+        p_ref = plan(buckets, refine=refine, **kwargs)
         rows.append(
             {
                 "arch": name,
@@ -46,10 +54,15 @@ def run(quick=False):
                 "cct_ours_ms": p.cct_ours,
                 "cct_fifo_ms": p.cct_fifo,
                 "weighted_ours": p.total_weighted_ours,
+                "weighted_ours_refined": p_ref.total_weighted_ours,
                 "weighted_fifo": p.total_weighted_fifo,
-                "chosen": p.chosen,
+                "chosen": p_ref.chosen,
+                "refine_gain_pct": (
+                    1 - p_ref.total_weighted_ours / p.total_weighted_ours
+                )
+                * 100,
                 "gain_vs_worse_pct": (
-                    1 - p.chosen_weighted
+                    1 - p_ref.chosen_weighted
                     / max(p.total_weighted_ours, p.total_weighted_fifo)
                 )
                 * 100,
@@ -62,14 +75,16 @@ def run(quick=False):
 def main(quick=False):
     rows = run(quick=quick)
     print(
-        "planner: arch,buckets,cct_ours_ms,cct_fifo_ms,"
-        "weighted_ours,weighted_fifo,chosen,gain_vs_worse_pct"
+        "planner: arch,buckets,cct_ours_ms,cct_fifo_ms,weighted_ours,"
+        "weighted_ours_refined,weighted_fifo,chosen,refine_gain_pct,"
+        "gain_vs_worse_pct"
     )
     for r in rows:
         print(
             f"planner,{r['arch']},{r['buckets']},{r['cct_ours_ms']:.1f},"
             f"{r['cct_fifo_ms']:.1f},{r['weighted_ours']:.0f},"
-            f"{r['weighted_fifo']:.0f},{r['chosen']},"
+            f"{r['weighted_ours_refined']:.0f},{r['weighted_fifo']:.0f},"
+            f"{r['chosen']},{r['refine_gain_pct']:.1f},"
             f"{r['gain_vs_worse_pct']:.1f}"
         )
     return rows

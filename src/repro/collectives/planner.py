@@ -38,8 +38,6 @@ import numpy as np
 
 from repro.core.coflow import CoflowInstance
 from repro.core import lp as lp_mod
-from repro.core import scheduler as sched_mod
-from repro.core.ordering import wspt_order
 
 __all__ = ["GradientBucket", "CollectivePlan", "buckets_from_params", "plan"]
 
@@ -118,6 +116,7 @@ def plan(
     backward_ms: float = 100.0,
     a2a_buckets: list[GradientBucket] | None = None,
     lp_method: str = "exact",
+    refine=None,
 ) -> CollectivePlan:
     """Run Algorithm 1 over the step's inter-pod coflows.
 
@@ -125,6 +124,13 @@ def plan(
     MB/ms * ... = 1 MB/ms approx: 1 GB/s = 1.0 MB per ms).  Weights encode
     optimizer criticality: earlier layers' buckets are needed LAST by the
     next forward, so later (deeper) buckets get higher weight.
+
+    ``refine`` (a `repro.pipeline.spec.RefineSpec` / ``True`` / field
+    dict) turns on batched candidate-search refinement of the Algorithm-1
+    order on the realized objective before the plan is exported — the
+    quality-vs-compute dial of `repro.pipeline.refine`.  Refinement only
+    ever accepts improving orders, so a refined plan is never worse and
+    keeps the (8K+1) guarantee.
     """
     demands, weights, releases, names = [], [], [], []
     for b in buckets:
@@ -152,7 +158,13 @@ def plan(
         if lp_method == "exact"
         else lp_mod.solve_subgradient(inst)
     )
-    ours = sched_mod.run(inst, "ours", lp_solution=lp_sol)
+    # run_batch (not the per-instance run) so refinement, when enabled,
+    # takes the batched member-expansion search path.
+    from repro.pipeline import get_pipeline
+
+    ours = get_pipeline("ours").run_batch(
+        [inst], lp_solutions=[lp_sol], refine=refine
+    )[0]
 
     # FIFO + load-only baseline: release order, tau-blind allocation.
     # Training-step coflows can be arrival-dominated (bucket service times

@@ -11,6 +11,18 @@ still applies to it.
 Neighborhood: adjacent transpositions, first-improvement sweeps, bounded
 rounds.  Cost per evaluation is one full allocation+scheduling pass
 (O(F·K + F log F + events)); M=100 paper instances evaluate in ~25 ms.
+This module is the per-instance NumPy *oracle*; the production path is
+`repro.pipeline.refine`, which evaluates whole candidate neighborhoods as
+extra `EnsembleBatch` members in one batched alloc+circuit pass and is
+bit-checked against `select_candidate` / `refine_round_best` here.
+
+Determinism contract (shared with the batched stage): all objective
+comparisons use the absolute tolerance `TOL` (= 1e-9) — a candidate is
+accepted only when it beats the incumbent by MORE than `TOL`, and among
+candidates within `TOL` of the round minimum the LOWEST candidate index
+wins.  Realized weighted CCTs are exact f64 reductions (bit-identical
+between the batched and sequential evaluators), so this rule makes both
+searches pick identical winners, swap for swap.
 """
 
 from __future__ import annotations
@@ -22,7 +34,19 @@ from repro.core.coflow import CoflowInstance
 from repro.core.scheduler import _schedule_all_cores, total_weighted_cct
 from repro.core.validate import ccts_from_schedules
 
-__all__ = ["refine_order", "evaluate_order"]
+__all__ = [
+    "TOL",
+    "evaluate_order",
+    "refine_order",
+    "refine_round_best",
+    "select_candidate",
+]
+
+#: Absolute objective tolerance of every refinement accept rule.  Weighted
+#: CCTs are exact f64 dot products of exact event times, so ties between
+#: order-equivalent candidates are exact; `TOL` only guards against callers
+#: comparing objectives that went through a lossy round trip.
+TOL = 1e-9
 
 
 def evaluate_order(
@@ -36,14 +60,40 @@ def evaluate_order(
     return total_weighted_cct(instance, ccts)
 
 
+def select_candidate(
+    objs: np.ndarray, incumbent: int = 0, tol: float = TOL
+) -> int:
+    """Canonical winner among candidate objectives — THE tie-break rule.
+
+    ``objs[incumbent]`` (slot 0 by convention) is the current order's
+    objective.  The incumbent is kept unless some candidate improves on it
+    by more than ``tol``; among candidates within ``tol`` of the round
+    minimum, the **lowest index** wins.  Both the batched argmin
+    (`repro.pipeline.refine`) and the sequential oracles below resolve
+    winners through this function, so they pick identical candidates even
+    when several are objective-tied (e.g. swaps of equal-release,
+    equal-demand coflows).
+    """
+    objs = np.asarray(objs, dtype=np.float64)
+    best = float(objs.min())
+    if not best < float(objs[incumbent]) - tol:
+        return int(incumbent)
+    return int(np.flatnonzero(objs <= best + tol)[0])
+
+
 def refine_order(
     instance: CoflowInstance,
     order: np.ndarray,
     max_rounds: int = 4,
     discipline: str = "greedy",
     verbose: bool = False,
+    tol: float = TOL,
 ):
     """First-improvement adjacent-swap hill climbing on the true objective.
+
+    Accept rule: a swap is taken only when its objective beats the current
+    best by more than ``tol`` (see `TOL`) — strictly-better-only, so equal
+    candidates never churn the order and repeated runs are deterministic.
 
     Returns (refined_order, best_objective, evaluations).
     """
@@ -58,7 +108,7 @@ def refine_order(
             cand[i], cand[i + 1] = cand[i + 1], cand[i]
             obj = evaluate_order(instance, cand, discipline)
             evals += 1
-            if obj < best - 1e-9:
+            if obj < best - tol:
                 order, best = cand, obj
                 improved = True
         if verbose:
@@ -66,3 +116,34 @@ def refine_order(
         if not improved:
             break
     return order, best, evals
+
+
+def refine_round_best(
+    instance: CoflowInstance,
+    order: np.ndarray,
+    discipline: str = "greedy",
+    tol: float = TOL,
+):
+    """Best candidate of ONE full adjacent-swap neighborhood, sequentially.
+
+    Candidate slot 0 is the incumbent ``order``; slot ``i`` (1-based)
+    swaps order positions ``(i-1, i)``.  Every candidate is evaluated on
+    the true objective and the winner resolved with `select_candidate` —
+    this is the independent per-instance oracle the batched refinement
+    stage's adjacent-neighborhood round is bit-checked against.
+
+    Returns ``(winner_slot, winner_order, objs)`` with ``objs`` the (M,)
+    candidate objective vector (``winner_slot == 0`` when no swap improves
+    the incumbent by more than ``tol``).
+    """
+    order = np.asarray(order)
+    cands = [order.copy()]
+    for i in range(len(order) - 1):
+        c = order.copy()
+        c[i], c[i + 1] = c[i + 1], c[i]
+        cands.append(c)
+    objs = np.array(
+        [evaluate_order(instance, c, discipline) for c in cands]
+    )
+    w = select_candidate(objs, tol=tol)
+    return w, cands[w].copy(), objs

@@ -64,6 +64,11 @@ __all__ = [
 _MANIFEST_SCHEMA = "sweep-cache-manifest-v1"
 
 
+def _utcnow() -> str:
+    """ISO-8601 UTC second-resolution stamp — the manifest's LRU clock."""
+    return time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+
+
 # --------------------------------------------------------------- digests
 def _canonical(obj: Any) -> Any:
     """Reduce `obj` to a JSON-stable structure for hashing.
@@ -309,13 +314,17 @@ class SweepCache:
 
     def get(self, key: str) -> dict | None:
         """Payload for `key`, or None (counts a hit/miss).  A manifest
-        entry whose object file vanished self-heals to a miss."""
+        entry whose object file vanished self-heals to a miss.  Hits
+        stamp the entry's ``accessed`` time — the LRU clock `gc` evicts
+        by (falling back to ``created`` for never-re-read cells)."""
         entry = self._manifest.get(key)
         if entry is not None:
             path = self._object_path(key)
             if os.path.exists(path):
                 with open(path) as f:
                     self.stats.hits += 1
+                    entry["accessed"] = _utcnow()
+                    self._dirty = True
                     return json.load(f)
             del self._manifest[key]
             self._dirty = True
@@ -332,8 +341,94 @@ class SweepCache:
         os.replace(tmp, path)
         self._manifest[key] = {
             "file": os.path.relpath(path, self.root),
-            "created": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "created": _utcnow(),
             **({} if meta is None else dict(meta)),
         }
         self._dirty = True
         self.stats.stored += 1
+
+    # -- eviction -------------------------------------------------------
+    def gc(
+        self,
+        max_bytes: int | None = None,
+        max_cells: int | None = None,
+    ) -> dict[str, int]:
+        """LRU eviction over the object store, with a self-healing rewrite.
+
+        Reconciles the in-memory manifest with disk first (merging entries
+        other workers flushed, dropping entries whose object file
+        vanished), then evicts least-recently-used cells — ordered by the
+        manifest's ``accessed`` timestamp (``created`` for cells never
+        re-read; key as the deterministic tie-break) — until the store
+        holds at most ``max_bytes`` of object payloads and ``max_cells``
+        entries.  Evicted object files are deleted and the manifest is
+        rewritten from scratch (NOT merge-on-flush: eviction must not be
+        resurrected by a stale on-disk copy).
+
+        Run it quiesced: an object another worker wrote but has not yet
+        flushed a manifest entry for is invisible here and survives, but
+        concurrent eviction of a cell mid-read in another process would
+        self-heal there as a miss, not corrupt it.
+
+        Returns counters: ``scanned`` / ``kept`` / ``evicted`` /
+        ``healed`` (dangling manifest entries dropped), ``freed_bytes``
+        and the surviving ``bytes``.
+        """
+        # Reconcile with whatever is on disk before deciding evictions.
+        merged: dict[str, dict] = {}
+        if os.path.exists(self.manifest_path):
+            with open(self.manifest_path) as f:
+                merged = json.load(f).get("cells", {})
+        merged.update(self._manifest)
+
+        sizes: dict[str, int] = {}
+        healed = 0
+        for key in list(merged):
+            try:
+                sizes[key] = os.path.getsize(self._object_path(key))
+            except OSError:
+                del merged[key]  # dangling entry: object file is gone
+                healed += 1
+        scanned = len(merged) + healed
+        total = sum(sizes.values())
+
+        # Oldest-first LRU queue; evict until both budgets hold.
+        def stamp(item):
+            key, entry = item
+            return (entry.get("accessed", entry.get("created", "")), key)
+
+        queue = sorted(merged.items(), key=stamp)
+        evicted = 0
+        freed = 0
+        for key, _entry in queue:
+            over_bytes = max_bytes is not None and total > max_bytes
+            over_cells = max_cells is not None and len(merged) > max_cells
+            if not (over_bytes or over_cells):
+                break
+            path = self._object_path(key)
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            try:  # drop the 2-hex prefix dir when it just emptied
+                os.rmdir(os.path.dirname(path))
+            except OSError:
+                pass
+            del merged[key]
+            total -= sizes[key]
+            freed += sizes[key]
+            evicted += 1
+
+        # Full rewrite (no merge): the surviving cells ARE the manifest.
+        self._manifest = merged
+        os.makedirs(self.root, exist_ok=True)
+        doc = {"schema": _MANIFEST_SCHEMA, "cells": merged}
+        tmp = self.manifest_path + f".tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, self.manifest_path)
+        self._dirty = False
+        return dict(
+            scanned=scanned, kept=len(merged), evicted=evicted,
+            healed=healed, freed_bytes=freed, bytes=total,
+        )

@@ -173,6 +173,7 @@ def sweep(
     validate: bool = True,
     mesh=None,
     cache: "cache_mod.SweepCache | str | None" = None,
+    refine=None,
 ) -> SweepResult:
     """Run an ensemble end to end with one shared LP phase.
 
@@ -218,6 +219,16 @@ def sweep(
     the stage cache and re-runs just the circuit stage.  Certificates
     ride in the OURS cell, so ``certify=True`` with a cache requires
     ``"ours"`` among the schemes.
+
+    ``refine`` applies candidate-search refinement on the realized
+    objective to EVERY scheme of this sweep (a
+    `repro.pipeline.RefineSpec`, ``True`` for the default dial, or a
+    field dict; schemes whose spec pins its own refine — OURS+LS — use
+    theirs when ``refine`` is None).  Under ``alloc="batch"`` the search
+    runs batched (candidate orders as extra `EnsembleBatch` member
+    rows); under ``alloc="loop"`` it runs the bit-identical sequential
+    oracle.  The canonical refine config joins the cell key via the
+    config digest — refined and unrefined sweeps never share cells.
     """
     instances = list(instances)
     schemes = tuple(schemes)
@@ -234,6 +245,12 @@ def sweep(
         raise ValueError(f"unknown alloc mode {alloc!r}")
     if circuit not in ("batch", "loop"):
         raise ValueError(f"unknown circuit mode {circuit!r}")
+    if refine not in (None, False):
+        from repro.pipeline.refine import as_refine_spec
+
+        refine = as_refine_spec(refine)
+    else:
+        refine = None
     if isinstance(cache, str):
         cache = cache_mod.SweepCache(cache)
     if cache is not None and certify and "ours" not in schemes:
@@ -262,6 +279,10 @@ def sweep(
                 circuit=circuit,
                 circuit_engine=circuit_engine,
                 certify=certify,
+                # The sweep-level refine override joins every cell key
+                # (None when schemes run their spec-pinned refine, which
+                # the scheme digest already captures).
+                refine=refine,
             )
         )
         inst_digests = [cache_mod.instance_digest(inst) for inst in instances]
@@ -323,11 +344,13 @@ def sweep(
             sc = stage_caches.setdefault(tuple(idx), {})
             res = pipe.run_batch(
                 sub, lp_solutions=subsols, validate=validate,
-                stage_cache=sc, mesh=mesh,
+                stage_cache=sc, mesh=mesh, refine=refine,
             )
         else:
             res = [
-                pipe.run(inst, lp_solution=sol, validate=validate)
+                pipe.run(
+                    inst, lp_solution=sol, validate=validate, refine=refine
+                )
                 for inst, sol in zip(sub, subsols)
             ]
         return dict(zip(idx, res))

@@ -15,7 +15,12 @@ that the first-class structure:
     every batched stage consumes, and the `AllocationBatch` it produces;
   * `repro.pipeline.batch_alloc` / `repro.pipeline.batch_circuit` — the
     vectorized (JAX) allocation scan and circuit event calendar that
-    `run_batch` runs across the ensemble axis.
+    `run_batch` runs across the ensemble axis;
+  * `repro.pipeline.refine` — batched candidate-search refinement on the
+    realized objective: candidate orders become extra member rows of the
+    same `EnsembleBatch` (`expand_members`), one batched alloc+circuit
+    pass scores all instances × candidates per round (the OURS+LS scheme,
+    and `run_batch(refine=...)` / `sweep(refine=...)`).
 
 Typical use::
 
@@ -35,8 +40,14 @@ from repro.pipeline.ensemble_batch import (
     build_ensemble_batch,
 )
 from repro.pipeline.pipeline import Pipeline, build_pipeline, get_pipeline
+from repro.pipeline.refine import (
+    RefineOutcome,
+    refine_batch_arrays,
+    refine_sequential,
+)
 from repro.pipeline.spec import (
     PAPER_SCHEMES,
+    RefineSpec,
     SchemeSpec,
     get_scheme,
     list_schemes,
@@ -64,6 +75,10 @@ __all__ = [
     "AllocationBatch",
     "build_ensemble_batch",
     "SchemeSpec",
+    "RefineSpec",
+    "RefineOutcome",
+    "refine_batch_arrays",
+    "refine_sequential",
     "PAPER_SCHEMES",
     "register_scheme",
     "get_scheme",

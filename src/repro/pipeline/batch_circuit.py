@@ -101,6 +101,7 @@ from repro.pipeline.ensemble_batch import AllocationBatch, EnsembleBatch
 __all__ = [
     "schedule_batch",
     "schedule_batch_arrays",
+    "cct_batch_arrays",
     "member_tables",
     "event_bound",
     "lower_calendar",
@@ -958,6 +959,64 @@ def schedule_batch(
             (schedules, ccts_from_schedules(inst.num_coflows, schedules))
         )
     return out
+
+
+def cct_batch_arrays(
+    ensemble: EnsembleBatch,
+    alloc: AllocationBatch,
+    discipline: str = "reserving",
+    engine: str = "auto",
+) -> np.ndarray:
+    """Realized per-coflow CCTs straight off the padded pytrees — lean.
+
+    The evaluation path of candidate-search refinement
+    (`repro.pipeline.refine`): identical member tables and calendar
+    execution as `schedule_batch_arrays` (``busy=None``), but only the
+    (B, Mp) CCT matrix is materialized — no `CoreSchedule` objects and no
+    per-flow array copies, which dominate the host-side cost when the
+    batch is instances × candidates wide.  Row ``b``'s first
+    ``num_coflows[b]`` entries equal `ccts_from_schedules` of the full
+    stage bit for bit (the max over an identical completion multiset is
+    order-independent); padded entries are 0.
+    """
+    engine = _check_engine(discipline, engine)
+    B = ensemble.num_instances
+    cct = np.zeros((B, ensemble.pad_coflows))
+    if B == 0:
+        return cct
+
+    members = []
+    for b in range(B):
+        coreb = alloc.core[b]
+        validb = alloc.valid[b]
+        for k in range(ensemble.num_cores[b]):
+            idx = np.nonzero(validb & (coreb == k))[0]
+            if idx.size:
+                members.append((b, k, idx))
+    if members:
+        tabs = [
+            dict(
+                src=alloc.src[b, idx],
+                dst=alloc.dst[b, idx],
+                rel=ensemble.releases[b, alloc.coflow[b, idx]],
+                dur=ensemble.delta[b]
+                + alloc.size[b, idx] / ensemble.rates[b, k],
+            )
+            for b, k, idx in members
+        ]
+        _est, comp = _execute_members(
+            tabs,
+            max(ensemble.num_ports[b] for b in range(B)),
+            discipline,
+            engine,
+            labels=[f"instance {b}, core {k}" for b, k, _ in members],
+            sharding=ensemble.sharding,
+        )
+        for g, (b, _k, idx) in enumerate(members):
+            np.maximum.at(
+                cct[b], alloc.coflow[b, idx], comp[g, : idx.shape[0]]
+            )
+    return cct
 
 
 def schedule_batch_arrays(

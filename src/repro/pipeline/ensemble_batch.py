@@ -51,6 +51,7 @@ __all__ = [
     "EnsembleBatch",
     "AllocationBatch",
     "build_ensemble_batch",
+    "expansion_maps",
     "BUILD_COUNT",
     "PAD_LB",
 ]
@@ -205,6 +206,67 @@ class EnsembleBatch:
         counts = np.take_along_axis(self.flow_counts, orders, axis=1)
         return np.cumsum(counts, axis=1)
 
+    # -- member expansion -------------------------------------------------
+    def expand_members(
+        self, reps: int
+    ) -> tuple["EnsembleBatch", np.ndarray, np.ndarray]:
+        """Tile every real member ``reps`` times along the member axis.
+
+        The member-expansion primitive behind candidate-search refinement
+        (`repro.pipeline.refine`): expanded row ``b * reps + c`` is copy
+        (candidate slot) ``c`` of instance ``b`` — candidate-major within
+        instance, so downstream stages see ``B * reps`` ordinary members
+        and never learn that rows share problem data.  Only the
+        ``num_instances`` real rows are tiled (padding rows are NOT
+        interleaved — stages assume rows ``0..num_instances-1`` are real);
+        when the batch carries a sharding, the tail re-pads to a multiple
+        of the ``data`` axis by repeating an existing fully-masked row.
+
+        Returns ``(expanded, instance_of, candidate_of)`` where the two
+        (B*reps,) index maps send an expanded row to its source instance
+        and candidate slot (see `expansion_maps`).  This is a pure gather
+        of an existing build, not a re-pack from instances, so
+        `BUILD_COUNT` is intentionally NOT bumped — the one-build-per-
+        ensemble contract still counts constructions from host data.
+        """
+        reps = int(reps)
+        if reps < 1:
+            raise ValueError(f"reps must be >= 1, got {reps}")
+        B = self.num_instances
+        Bp = self.pad_members
+        idx = np.repeat(np.arange(B, dtype=np.int64), reps)
+        new_B = B * reps
+        new_Bp = new_B
+        if self.sharding is not None:
+            q = int(self.sharding.mesh.shape["data"])
+            new_Bp = max(_round_up(max(new_B, 1), q), new_B)
+        if new_Bp > new_B:
+            # A shard-count remainder implies B was rounded up too, so a
+            # fully-masked template row exists to clone into the tail.
+            assert Bp > B, "sharded batch without a masked padding row"
+            idx = np.concatenate(
+                [idx, np.full(new_Bp - new_B, Bp - 1, dtype=np.int64)]
+            )
+
+        def rep(t: tuple) -> tuple:
+            return tuple(x for x in t for _ in range(reps))
+
+        kw = {}
+        for f in dataclasses.fields(self):
+            if f.metadata.get("static"):
+                kw[f.name] = getattr(self, f.name)
+            else:
+                kw[f.name] = np.asarray(getattr(self, f.name))[idx]
+        kw.update(
+            num_instances=new_B,
+            num_coflows=rep(self.num_coflows),
+            num_ports=rep(self.num_ports),
+            num_cores=rep(self.num_cores),
+            num_flows=rep(self.num_flows),
+            sharding=self.sharding,
+        )
+        return EnsembleBatch(**kw), *expansion_maps(B, reps)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -252,6 +314,24 @@ class AllocationBatch:
                 )
             )
         return out
+
+
+def expansion_maps(
+    num_instances: int, reps: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Row-index maps of `EnsembleBatch.expand_members`'s layout.
+
+    Expanded row ``r`` (for ``r < num_instances * reps``) holds candidate
+    slot ``candidate_of[r]`` of instance ``instance_of[r]`` — the inverse
+    of ``row = instance * reps + candidate``.
+    """
+    instance_of = np.repeat(
+        np.arange(num_instances, dtype=np.int64), reps
+    )
+    candidate_of = np.tile(
+        np.arange(reps, dtype=np.int64), num_instances
+    )
+    return instance_of, candidate_of
 
 
 def build_ensemble_batch(

@@ -37,6 +37,13 @@ from repro.core.scheduler import ScheduleResult, total_weighted_cct
 from repro.core.validate import validate_schedule
 from repro.pipeline import stages as st
 from repro.pipeline.ensemble_batch import EnsembleBatch, build_ensemble_batch
+from repro.pipeline.refine import (
+    RefineOutcome,
+    as_refine_spec,
+    refine_batch_arrays,
+    refine_key,
+    refine_sequential,
+)
 from repro.pipeline.spec import SchemeSpec, get_scheme
 
 __all__ = ["Pipeline", "build_pipeline", "get_pipeline"]
@@ -87,19 +94,52 @@ class Pipeline:
     allocate_stage: Any
     circuit_stage: Any
 
+    def _resolve_refine(self, refine):
+        """Effective `RefineSpec` for a run: an explicit ``refine=``
+        argument wins, ``None`` defers to the spec, ``False`` disables a
+        spec-level refine."""
+        if refine is None:
+            refine = self.spec.refine
+        if refine in (None, False):
+            return None
+        return as_refine_spec(refine)
+
+    def _sequential_refine_eval(self, instance):
+        """Objective callback for `refine_sequential` through THIS
+        pipeline's per-instance stages (so sequential refinement evaluates
+        exactly the scheme's allocation + circuit configuration)."""
+
+        def evaluate(order: np.ndarray) -> float:
+            alloc = self.allocate_stage.allocate(instance, order)
+            _, ccts = self.circuit_stage.schedule(instance, alloc, order)
+            return total_weighted_cct(instance, ccts)
+
+        return evaluate
+
     def run(
         self,
         instance: CoflowInstance,
         lp_solution: LPSolution | None = None,
         validate: bool = True,
+        refine=None,
     ) -> ScheduleResult:
         """Run one instance end to end (legacy `scheduler.run` parity).
 
         ``lp_solution`` shares one LP solve across schemes; ordering stages
         that do not consume the LP ignore it (and record None).
+        ``refine`` enables candidate-search refinement of the order on the
+        realized objective (a `RefineSpec` / ``True`` / field dict;
+        default None defers to ``spec.refine``, ``False`` disables it) —
+        here via the per-instance `refine_sequential` oracle, bit-identical
+        to `run_batch`'s batched search.
         """
         order, lp_sol = self.order_stage.order(instance, lp_solution)
         t0 = time.perf_counter()
+        eff_refine = self._resolve_refine(refine)
+        if eff_refine is not None:
+            order, _, _, _, _ = refine_sequential(
+                order, eff_refine, self._sequential_refine_eval(instance)
+            )
         alloc = self.allocate_stage.allocate(instance, order)
         schedules, ccts = self.circuit_stage.schedule(instance, alloc, order)
         if validate and schedules is not None:
@@ -124,19 +164,37 @@ class Pipeline:
             getattr(st, "method", None), getattr(st, "iters", None),
         )
 
-    def _alloc_key(self) -> tuple:
+    def _refine_key(self, refine_t: tuple) -> tuple:
+        """Stage-identity key of a refinement pass.  Refined orders depend
+        on everything the search evaluates through — the refine config AND
+        the allocation/circuit configuration — so all of it joins the key
+        (engines are bit-identical, but stay in the key like
+        `_circuit_key` keeps them: conservative beats stale)."""
+        ast = self.allocate_stage
+        cst = self.circuit_stage
+        return (
+            "refine", refine_t,
+            ast.kind, getattr(ast, "include_tau", None),
+            cst.kind, getattr(cst, "discipline", None),
+            getattr(cst, "backend", None), getattr(cst, "engine", None),
+        ) + self._order_key()
+
+    def _alloc_key(self, refine_t: tuple | None = None) -> tuple:
         st = self.allocate_stage
         return (
             "alloc", st.kind, getattr(st, "include_tau", None),
-        ) + self._order_key()
+        ) + (
+            self._order_key() if refine_t is None
+            else self._refine_key(refine_t)
+        )
 
-    def _circuit_key(self) -> tuple:
+    def _circuit_key(self, refine_t: tuple | None = None) -> tuple:
         st = self.circuit_stage
         return (
             "circuit", st.kind,
             getattr(st, "discipline", None), getattr(st, "backend", None),
             getattr(st, "engine", None),
-        ) + self._alloc_key()
+        ) + self._alloc_key(refine_t)
 
     def run_batch(
         self,
@@ -147,6 +205,7 @@ class Pipeline:
         stage_cache: dict | None = None,
         ensemble: EnsembleBatch | None = None,
         mesh=None,
+        refine=None,
     ) -> list[ScheduleResult]:
         """Run a whole ensemble as one array pipeline over an `EnsembleBatch`.
 
@@ -179,6 +238,20 @@ class Pipeline:
         first used on (an identity fingerprint of instances and LP
         solutions): reusing one dict across different ensembles raises
         `ValueError` instead of silently returning stale stage outputs.
+
+        ``refine`` enables candidate-search refinement of the computed
+        orders on the realized objective (a `RefineSpec` / ``True`` /
+        field dict; default None defers to ``spec.refine``, ``False``
+        disables it).  With array-capable allocation and circuit stages
+        the search runs batched — candidate orders become extra member
+        rows of the same `EnsembleBatch` via `refine_batch_arrays`, one
+        alloc+circuit pass per round over all instances × candidates —
+        otherwise it falls back to the per-instance `refine_sequential`
+        oracle (an error under ``require_batch`` when the stages ARE
+        array-capable, e.g. the ``"loop"`` circuit backend).  The refine
+        config and the alloc/circuit configuration join the stage-cache
+        key chain, so refined and unrefined pipelines share the ordering
+        pass but nothing downstream of it.
         """
         instances = list(instances)
         B = len(instances)
@@ -260,12 +333,69 @@ class Pipeline:
                 stage_cache[self._order_key()] = cached
         orders_arr, lp_list = cached
         lp_list = lp_list if lp_list is not None else [None] * B
+        t0 = time.perf_counter()
+
+        # --- refinement: candidate search on the realized objective -------
+        eff_refine = self._resolve_refine(refine)
+        refine_t = None
+        if eff_refine is not None:
+            refine_t = refine_key(eff_refine)
+            outcome = None if stage_cache is None else stage_cache.get(
+                self._refine_key(refine_t)
+            )
+            if outcome is None:
+                alloc_arrays_fn = getattr(
+                    self.allocate_stage, "allocate_batch_arrays", None
+                )
+                cct_arrays_fn = getattr(
+                    self.circuit_stage, "cct_batch_arrays", None
+                )
+                batch_capable = (
+                    alloc_arrays_fn is not None and cct_arrays_fn is not None
+                )
+                if batch_capable and getattr(
+                    self.circuit_stage, "backend", "batch"
+                ) == "batch":
+                    outcome = refine_batch_arrays(
+                        ensemble, orders_arr, eff_refine,
+                        alloc_fn=alloc_arrays_fn, cct_fn=cct_arrays_fn,
+                    )
+                else:
+                    if require_batch and batch_capable:
+                        raise RuntimeError(
+                            f"run_batch fell back to the sequential "
+                            f"refinement loop for scheme {self.spec.key!r} "
+                            f"(circuit stage "
+                            f"{type(self.circuit_stage).__name__}, backend "
+                            f"{getattr(self.circuit_stage, 'backend', None)!r})"
+                        )
+                    ref_orders = np.array(orders_arr)
+                    objective = np.zeros(B)
+                    base_obj = np.zeros(B)
+                    rounds = evals = 0
+                    for b, inst in enumerate(instances):
+                        o2, cur_b, base_b, r_b, e_b = refine_sequential(
+                            orders_arr[b, : Ms[b]], eff_refine,
+                            self._sequential_refine_eval(inst),
+                        )
+                        ref_orders[b, : Ms[b]] = o2
+                        objective[b], base_obj[b] = cur_b, base_b
+                        rounds = max(rounds, r_b)
+                        evals += e_b
+                    outcome = RefineOutcome(
+                        orders=ref_orders, objective=objective,
+                        base_objective=base_obj, rounds=rounds,
+                        evaluations=evals, batched=False,
+                    )
+                if stage_cache is not None:
+                    stage_cache[self._refine_key(refine_t)] = outcome
+            orders_arr = outcome.orders
+
         orders = [orders_arr[b, : Ms[b]] for b in range(B)]
 
         # --- allocation: AllocationBatch, materialized once ---------------
-        t0 = time.perf_counter()
         a_cached = None if stage_cache is None else stage_cache.get(
-            self._alloc_key()
+            self._alloc_key(refine_t)
         )
         if a_cached is None:
             alloc_batch = None
@@ -300,7 +430,7 @@ class Pipeline:
                     ]
             a_cached = (alloc_batch, allocs)
             if stage_cache is not None:
-                stage_cache[self._alloc_key()] = a_cached
+                stage_cache[self._alloc_key(refine_t)] = a_cached
         alloc_batch, allocs = a_cached
         alloc_share = (time.perf_counter() - t0) / max(B, 1)
 
@@ -313,7 +443,7 @@ class Pipeline:
         per_instance_s = None
         circuit_share = 0.0
         pairs = None if stage_cache is None else stage_cache.get(
-            self._circuit_key()
+            self._circuit_key(refine_t)
         )
         if pairs is None:
             t1 = time.perf_counter()
@@ -345,7 +475,7 @@ class Pipeline:
             else:
                 circuit_share = (time.perf_counter() - t1) / max(B, 1)
             if stage_cache is not None:
-                stage_cache[self._circuit_key()] = pairs
+                stage_cache[self._circuit_key(refine_t)] = pairs
 
         # --- materialize per-instance results (end of the pipeline) -------
         results = []

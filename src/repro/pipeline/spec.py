@@ -21,11 +21,58 @@ import dataclasses
 
 __all__ = [
     "SchemeSpec",
+    "RefineSpec",
+    "REFINE_GENERATORS",
     "PAPER_SCHEMES",
     "register_scheme",
     "get_scheme",
     "list_schemes",
 ]
+
+#: Candidate generators `repro.pipeline.refine` understands.
+REFINE_GENERATORS = ("adjacent", "perturb", "crossover")
+
+
+@dataclasses.dataclass(frozen=True)
+class RefineSpec:
+    """Candidate-search refinement config — the quality-vs-compute dial.
+
+    The refine budget is ``rounds × candidates``: each round evaluates
+    ``candidates`` orders per instance (slot 0 is always the incumbent)
+    in ONE batched alloc+circuit pass over an expanded `EnsembleBatch`
+    (`repro.pipeline.refine`), keeps per-instance winners under the
+    canonical tolerance/tie-break rule
+    (`repro.core.localsearch.select_candidate`), and stops early once no
+    instance improves.  Only improving candidates are ever accepted, so
+    refined schedules keep the paper's (8K+1) guarantee.
+
+    Attributes:
+      rounds: maximum search rounds (>= 1).
+      candidates: batch rows per instance per round, incumbent included
+        (>= 1; ``candidates - 1`` fresh candidates per round).
+      generators: cycle of candidate generators filling slots 1.. —
+        ``"adjacent"`` (adjacent-transposition neighborhood, a rolling
+        window when the budget is below M-1), ``"perturb"``
+        (LP-perturbation restart: incumbent positions + ``sigma`` ×
+        Gaussian noise, stable argsort), ``"crossover"`` (order crossover
+        between two elite orders; falls back to perturb until the elite
+        pool has two members).
+      seed: base seed; every (round, slot) derives its own
+        ``np.random.default_rng((seed, round, slot))`` stream per
+        instance, so candidates are deterministic AND independent of
+        batch composition.
+      sigma: perturbation strength in order-position units.
+      elites: per-instance elite-pool size for crossover parents.
+      tol: accept/tie tolerance (see `repro.core.localsearch.TOL`).
+    """
+
+    rounds: int = 2
+    candidates: int = 8
+    generators: tuple = REFINE_GENERATORS
+    seed: int = 0
+    sigma: float = 2.0
+    elites: int = 4
+    tol: float = 1e-9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +91,10 @@ class SchemeSpec:
         (EPS priority fluid rates, Theorem 2).
       discipline: pins the list-scheduler discipline (``"greedy"`` /
         ``"reserving"``); None defers to the caller's default.
+      refine: candidate-search refinement on the realized objective
+        (`RefineSpec`), or None for Algorithm 1 as-is.  Part of the spec
+        (and hence of sweep cache keys) so OURS+LS is registry data, not
+        a pipeline fork.
     """
 
     key: str
@@ -52,6 +103,7 @@ class SchemeSpec:
     include_tau: bool = True
     circuit: str = "list"
     discipline: str | None = None
+    refine: RefineSpec | None = None
 
 
 #: The five Sec. V-B schemes, in the order figures report them.
@@ -96,6 +148,9 @@ for _spec in (
     SchemeSpec(key="bvn_s", name="BVN-S", circuit="bvn"),
     # Theorem 2's multi-core EPS variant (delta = 0, fluid priority rates).
     SchemeSpec(key="eps", name="EPS", include_tau=False, circuit="fluid"),
+    # Beyond-paper: Algorithm 1 + batched candidate-search refinement on
+    # the realized objective (never worse than OURS; same (8K+1) bound).
+    SchemeSpec(key="ours_ls", name="OURS+LS", refine=RefineSpec()),
 ):
     register_scheme(_spec)
 del _spec

@@ -289,6 +289,20 @@ class ListCircuit:
             discipline=self.discipline, engine=self.engine,
         )
 
+    def cct_batch_arrays(self, ensemble, alloc_batch):
+        """Lean CCT-only array form — candidate-search refinement's inner
+        evaluation (`repro.pipeline.refine`): same calendar, no
+        `CoreSchedule` materialization.  None under the ``"loop"``
+        backend (refinement then runs its sequential oracle)."""
+        if self.backend != "batch":
+            return None
+        from repro.pipeline.batch_circuit import cct_batch_arrays
+
+        return cct_batch_arrays(
+            ensemble, alloc_batch,
+            discipline=self.discipline, engine=self.engine,
+        )
+
 
 class SequentialCircuit:
     """Sunflow-style one-coflow-at-a-time intra-core scheduling."""

@@ -127,6 +127,90 @@ class TestStore:
         assert c3.get("d" * 64) == {"y": 2}
 
 
+class TestGc:
+    """`SweepCache.gc`: LRU eviction + self-healing manifest rewrite."""
+
+    @staticmethod
+    def _fill(c, n, size=100):
+        # Distinct keys with strictly increasing LRU stamps (the wall
+        # clock's 1 s resolution would tie within a fast test run).
+        keys = [format(i, "x") * 32 for i in range(n)]
+        for i, k in enumerate(keys):
+            c.put(k, {"blob": "x" * size})
+            c._manifest[k]["created"] = f"2026-01-01T00:00:{i:02d}Z"
+        return keys
+
+    def test_noop_under_budget(self, tmp_path):
+        c = SweepCache(tmp_path)
+        keys = self._fill(c, 3)
+        stats = c.gc(max_bytes=10**9)
+        assert stats["evicted"] == 0 and stats["kept"] == 3
+        assert all(c.get(k) is not None for k in keys)
+
+    def test_evicts_oldest_first(self, tmp_path):
+        c = SweepCache(tmp_path)
+        keys = self._fill(c, 4)
+        sz = os.path.getsize(c._object_path(keys[0]))
+        stats = c.gc(max_bytes=2 * sz)
+        assert stats["evicted"] == 2 and stats["bytes"] <= 2 * sz
+        assert c.get(keys[0]) is None and c.get(keys[1]) is None
+        assert c.get(keys[2]) is not None and c.get(keys[3]) is not None
+        assert not os.path.exists(c._object_path(keys[0]))
+
+    def test_hit_refreshes_lru_rank(self, tmp_path):
+        c = SweepCache(tmp_path)
+        keys = self._fill(c, 3)
+        assert c.get(keys[0]) is not None  # stamps "accessed" = now
+        sz = os.path.getsize(c._object_path(keys[0]))
+        c.gc(max_bytes=sz)
+        # keys[1] (oldest untouched) went first; the re-read oldest
+        # cell was promoted to most-recent and survives to the end.
+        assert c.get(keys[0]) is not None
+        assert c.get(keys[1]) is None and c.get(keys[2]) is None
+
+    def test_max_cells_budget(self, tmp_path):
+        c = SweepCache(tmp_path)
+        keys = self._fill(c, 5)
+        stats = c.gc(max_cells=2)
+        assert stats["kept"] == 2
+        assert [k for k in keys if c.get(k) is not None] == keys[3:]
+
+    def test_heals_dangling_entries(self, tmp_path):
+        c = SweepCache(tmp_path)
+        keys = self._fill(c, 3)
+        os.remove(c._object_path(keys[1]))
+        stats = c.gc()  # no budgets: pure self-heal pass
+        assert stats == {
+            "scanned": 3, "kept": 2, "evicted": 0, "healed": 1,
+            "freed_bytes": 0, "bytes": stats["bytes"],
+        }
+        doc = json.loads((tmp_path / "manifest.json").read_text())
+        assert sorted(doc["cells"]) == sorted([keys[0], keys[2]])
+
+    def test_eviction_survives_restart(self, tmp_path):
+        # The rewrite must NOT merge with the stale on-disk manifest:
+        # evicted cells stay gone for a fresh handle on the same root.
+        c = SweepCache(tmp_path)
+        keys = self._fill(c, 4)
+        c.flush()
+        c.gc(max_cells=1)
+        c2 = SweepCache(tmp_path)
+        assert len(c2) == 1
+        assert c2.get(keys[3]) is not None
+        assert all(c2.get(k) is None for k in keys[:3])
+
+    def test_gc_merges_unflushed_disk_entries(self, tmp_path):
+        # Another worker's flushed cells are visible to gc even when this
+        # handle never loaded them.
+        other = SweepCache(tmp_path)
+        other.put("e" * 64, {"x": 1})
+        other.flush()
+        c = SweepCache(tmp_path)
+        c._manifest = {}  # simulate a handle opened before other's flush
+        stats = c.gc(max_bytes=10**9)
+        assert stats["kept"] == 1
+
+
 class TestSweepIntegration:
     def test_replay_computes_zero_cells(self, tmp_path):
         ens = _ens()
