@@ -320,6 +320,18 @@ def bench_circuit_engines(quick=False, ensemble_size=24, lp_iters=200):
 # number is uninterpretable (was that 3x on CPU or on a v5e?).
 TRAJECTORY_META = ("backend", "device_kind", "num_devices", "jax_version")
 
+# Keys every *service* (streaming trace scenario) entry must carry.  A
+# metric that did not exist when an entry was recorded is normalized to
+# an explicit ``null`` — absent keys are a schema error, so a reader can
+# always distinguish "not measured yet" from "silently dropped".
+SERVICE_KEYS = (
+    "service_epochs",
+    "service_warm_resolves",
+    "service_bound_margin_x",
+    "service_resolve_p50_ms",
+    "service_epoch_warm_x",
+)
+
 
 def backend_metadata():
     """The per-entry device/backend stamp for ``BENCH_micro.json``."""
@@ -332,8 +344,13 @@ def backend_metadata():
 
 
 def validate_trajectory(doc, path="BENCH_micro.json"):
-    """Schema check for the trajectory file: every entry's stats must
-    carry all ``TRAJECTORY_META`` keys.  Returns failure strings."""
+    """Schema check for the trajectory file.
+
+    Every entry's stats must carry all ``TRAJECTORY_META`` keys plus a
+    ``bench`` family tag (``engines`` / ``streaming`` / ``trace`` / ...),
+    and every entry carrying service metrics must carry the full
+    ``SERVICE_KEYS`` set — explicit ``null`` for metrics that predate
+    the entry, never a missing key.  Returns failure strings."""
     failures = []
     if doc.get("schema") != "bench-micro-trajectory-v1":
         failures.append(f"{path}: bad schema {doc.get('schema')!r}")
@@ -345,6 +362,21 @@ def validate_trajectory(doc, path="BENCH_micro.json"):
                 f"{path} entry {i} ({entry.get('timestamp')}): "
                 f"missing metadata keys {missing}"
             )
+        if "bench" not in stats:
+            failures.append(
+                f"{path} entry {i} ({entry.get('timestamp')}): "
+                f"missing 'bench' family tag"
+            )
+        if stats.get("bench") == "trace" or any(
+            k.startswith("service_") for k in stats
+        ):
+            missing_s = [k for k in SERVICE_KEYS if k not in stats]
+            if missing_s:
+                failures.append(
+                    f"{path} entry {i} ({entry.get('timestamp')}): "
+                    f"service entry missing keys {missing_s} "
+                    f"(record unmeasured metrics as null)"
+                )
     return failures
 
 
@@ -543,7 +575,7 @@ def engines_smoke(quick=False, trajectory=False):
     artifact) and — with ``trajectory=True`` — appends a timestamped
     entry to the repo-tracked ``BENCH_micro.json``.
     """
-    stats = bench_circuit_engines(quick=quick)
+    stats = {"bench": "engines", **bench_circuit_engines(quick=quick)}
     for name, val in stats.items():
         if isinstance(val, float):
             print(f"micro,{name},{val:.6g}")
@@ -671,7 +703,11 @@ def bench_streaming(quick=False, lp_iters=1500):
          taken over re-solve epochs (index >= 1) only.  Warm epochs seed
          the subgradient with the previous iterate's full precedence
          matrix and run ``lp_iters_warm = lp_iters // 3`` iterations, so
-         the expected speedup is ~3x minus fixed per-epoch overhead.
+         the expected speedup is ~3x minus fixed per-epoch overhead;
+      4. compile stability — after the timed runs warmed every bucket,
+         one more identical resident-mode stream must add zero entries
+         to the fused epoch step's compile cache
+         (``streaming_epoch_retraces == 0``).
     """
     from repro.experiments import stream
     from repro.traffic.arrivals import poisson_arrivals, with_releases
@@ -722,8 +758,36 @@ def bench_streaming(quick=False, lp_iters=1500):
             f"expected >= 3 warm re-solve epochs, got "
             f"{warm_res.warm_resolves}"
         )
+
+    # 4. compile stability — the device-resident epoch driver must be
+    #    fully warmed up by now (lp_method="batch" resolves epoch_mode
+    #    "auto" -> "resident", and each variant above already ran twice):
+    #    one more identical stream must add ZERO entries to the fused
+    #    epoch step's compile cache.  A retrace here means the resident
+    #    path is rebuilding shapes per epoch — exactly the cost the
+    #    slot-pool representation exists to kill.
+    from repro.pipeline import batch_alloc
+
+    retraces = None
+    probe = getattr(batch_alloc._scan_all, "_cache_size", None)
+    if probe is not None:
+        before = probe()
+        res_probe = stream(inst, warm_start=True, **kw)
+        if res_probe.epoch_mode != "resident":
+            raise AssertionError(
+                f"expected resident epoch driver for lp_method='batch', "
+                f"got {res_probe.epoch_mode!r}"
+            )
+        retraces = probe() - before
+        if retraces != 0:
+            raise AssertionError(
+                f"resident epoch step retraced after warm-up: "
+                f"{retraces} new compile-cache entries"
+            )
     return {
         "streaming_epochs": cold_res.num_resolves,
+        "streaming_epoch_mode": warm_res.epoch_mode,
+        "streaming_epoch_retraces": retraces,
         "streaming_warm_resolves": warm_res.warm_resolves,
         "streaming_iteration_savings": warm_res.iteration_savings,
         "streaming_cold_resolve_s": t_cold,
@@ -741,9 +805,12 @@ def streaming_smoke(quick=False, trajectory=False):
     ``results/benchmarks/micro.json``; with ``trajectory=True`` the
     stats also land in the repo-tracked ``BENCH_micro.json``.
     """
-    stats = bench_streaming(quick=quick)
+    stats = {"bench": "streaming", **bench_streaming(quick=quick)}
     for name, val in stats.items():
-        print(f"micro,{name},{val:.6g}")
+        if isinstance(val, float):
+            print(f"micro,{name},{val:.6g}")
+        else:
+            print(f"micro,{name},{val}")
     _merge_micro_json(stats)
     if trajectory:
         path = record_trajectory(stats)
@@ -862,9 +929,12 @@ def refine_smoke(quick=False, trajectory=False):
     ``results/benchmarks/micro.json``; with ``trajectory=True`` the
     stats also land in the repo-tracked ``BENCH_micro.json``.
     """
-    stats = bench_refine(quick=quick)
+    stats = {"bench": "refine", **bench_refine(quick=quick)}
     for name, val in stats.items():
-        print(f"micro,{name},{val:.6g}")
+        if isinstance(val, float):
+            print(f"micro,{name},{val:.6g}")
+        else:
+            print(f"micro,{name},{val}")
     _merge_micro_json(stats)
     if trajectory:
         path = record_trajectory(stats)
@@ -966,9 +1036,12 @@ def cache_smoke(quick=False, trajectory=False):
     ``results/benchmarks/cache_smoke/`` so CI can upload its
     ``manifest.json`` as an artifact next to micro.json.
     """
-    stats = bench_sweep_cache(quick=quick)
+    stats = {"bench": "cache", **bench_sweep_cache(quick=quick)}
     for name, val in stats.items():
-        print(f"micro,{name},{val:.6g}")
+        if isinstance(val, float):
+            print(f"micro,{name},{val:.6g}")
+        else:
+            print(f"micro,{name},{val}")
     _merge_micro_json(stats)
     if trajectory:
         path = record_trajectory(stats)

@@ -289,6 +289,26 @@ def _subgradient_run(
     return best_Y, T_best, best_F, hist
 
 
+def warm_start_Y0_dense(
+    weights: np.ndarray, glb: np.ndarray, warm_start_order: np.ndarray | None = None
+) -> np.ndarray:
+    """Strict-upper-triangular warm start from per-coflow arrays.
+
+    Array-in flavor of the default warm start (the weighted global
+    lower-bound order, WSPT-like) — the streaming service builds epoch
+    warm starts from its resident per-slot vectors without materializing
+    a `CoflowInstance`.  Y0[a, b] = 1 iff a precedes b, kept for a < b.
+    """
+    M = int(np.asarray(weights).shape[0])
+    if warm_start_order is None:
+        score = np.asarray(weights) / np.maximum(np.asarray(glb), 1e-12)
+        warm_start_order = np.argsort(-score, kind="stable")
+    pos = np.empty(M, dtype=np.int64)
+    pos[warm_start_order] = np.arange(M)
+    Y0 = (pos[:, None] < pos[None, :]).astype(np.float32)  # x_ab=1 iff a first
+    return np.triu(Y0, k=1)
+
+
 def _warm_start_Y0(
     instance: CoflowInstance, warm_start_order: np.ndarray | None
 ) -> np.ndarray:
@@ -297,14 +317,9 @@ def _warm_start_Y0(
     Defaults to the weighted global lower-bound order (WSPT-like);
     Y0[a, b] = 1 iff a precedes b, kept only for a < b.
     """
-    M = instance.num_coflows
-    if warm_start_order is None:
-        score = instance.weights / np.maximum(instance.global_lower_bound(), 1e-12)
-        warm_start_order = np.argsort(-score, kind="stable")
-    pos = np.empty(M, dtype=np.int64)
-    pos[warm_start_order] = np.arange(M)
-    Y0 = (pos[:, None] < pos[None, :]).astype(np.float32)  # x_ab=1 iff a first
-    return np.triu(Y0, k=1)
+    return warm_start_Y0_dense(
+        instance.weights, instance.global_lower_bound(), warm_start_order
+    )
 
 
 def _precedence_from_Y(Y: np.ndarray) -> np.ndarray:
@@ -686,3 +701,54 @@ def solve_subgradient_batch(
         arrays, iters=iters, sharding=sharding
     )
     return batch.unpack([inst.num_coflows for inst in instances])
+
+
+# ---------------------------------------------------------------------------
+# Device-resident warm state (streaming epochs)
+# ---------------------------------------------------------------------------
+#
+# The streaming service keeps one (S, S) precedence matrix and a (S,) solved
+# mask on device for the life of a stream; each epoch gathers the active
+# slots' pairwise precedences into the dense warm start and scatters the
+# solved pairs back — both as fixed-shape jits (slot vectors padded to S with
+# the out-of-range index S), so the warm state never round-trips through the
+# host and the epoch step stays compile-stable across varying active counts.
+
+
+@jax.jit
+def warm_gather_device(Yw, solved, slots, default_Y0):
+    """Warm-start gather: overwrite solved pairs of the dense Y0.
+
+    ``Yw`` (S, S) f32 and ``solved`` (S,) bool are the resident warm
+    state; ``slots`` (S,) i32 maps dense position d -> slot id (padded
+    positions hold S, gathered as unsolved/zero); ``default_Y0`` (S, S)
+    f32 is the epoch's cold warm start.  Returns ``(Y0, any_warm)``:
+    strict-upper Y0 with previously-solved pairs replaced by their last
+    precedence, and whether any pair was warm (a scalar the host reads
+    to pick the reduced warm iteration budget).
+    """
+    prev = jnp.take(solved, slots, mode="fill", fill_value=False)
+    both = prev[:, None] & prev[None, :]
+    rows = jnp.take(Yw, slots, axis=0, mode="fill", fill_value=0.0)
+    Ys = jnp.take(rows, slots, axis=1, mode="fill", fill_value=0.0)
+    upper = jnp.triu(jnp.ones(Yw.shape, dtype=bool), k=1)
+    warm_pair = both & upper
+    Y0 = jnp.where(warm_pair, Ys, default_Y0)
+    return jnp.triu(Y0, k=1), warm_pair.any()
+
+
+@jax.jit
+def warm_scatter_device(Yw, slots, y):
+    """Scatter an epoch's solved precedences back into the warm state.
+
+    ``y`` (S, S) f32 is the batched solver's strict-upper solution for
+    the dense epoch (row/col d = dense position d).  The full precedence
+    matrix (x_ab + x_ba = 1, zero diagonal) is formed on device and
+    written at ``(slots[a], slots[b])``; padded positions carry slot
+    index S and are dropped by the scatter.  Returns the updated ``Yw``
+    (the small (S,) solved mask is host-side bookkeeping — the gather
+    masks by it, so stale rows never need clearing).
+    """
+    u = jnp.triu(y, k=1)
+    full = u + jnp.tril(1.0 - u.T, k=-1)
+    return Yw.at[slots[:, None], slots[None, :]].set(full, mode="drop")

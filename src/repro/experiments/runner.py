@@ -74,6 +74,8 @@ def run_shard(
     shard: int = 0,
     num_shards: int = 1,
     base: str = "ours",
+    gc_max_bytes: int | None = None,
+    gc_max_cells: int | None = None,
     **sweep_kwargs,
 ) -> SweepResult:
     """Materialize and sweep this shard's cells; optionally persist rows.
@@ -84,11 +86,30 @@ def run_shard(
     makes shard re-runs resumable; a shared cache directory lets any
     worker reuse any worker's cells).  With ``name`` the shard's rows are
     saved as ``<shard_name>.json/.csv`` for `merge_shards`.
+
+    ``gc_max_bytes`` / ``gc_max_cells`` bound the sweep cache across
+    repeated shard runs: after the sweep's own flush, the cache is
+    LRU-evicted down to the budgets (`SweepCache.gc`), so a long-running
+    driver looping over `run_shard` holds a bounded store instead of
+    accreting every cell it ever computed.  Ignored without ``cache=``.
     """
     idx = shard_indices(len(specs), shard, num_shards)
     instances = [make(specs[i]) for i in idx]
     metas = [dict(specs[i], cell=i) for i in idx]
+    cache = sweep_kwargs.get("cache")
+    if isinstance(cache, str) and (
+        gc_max_bytes is not None or gc_max_cells is not None
+    ):
+        # Coerce here so the post-sweep gc acts on the same store object.
+        from repro.experiments.cache import SweepCache
+
+        cache = SweepCache(cache)
+        sweep_kwargs["cache"] = cache
     result = sweep(instances, metas=metas, **sweep_kwargs)
+    if cache is not None and (
+        gc_max_bytes is not None or gc_max_cells is not None
+    ):
+        cache.gc(max_bytes=gc_max_bytes, max_cells=gc_max_cells)
     if name is not None:
         save_rows(shard_name(name, shard, num_shards), result.rows(base))
     return result

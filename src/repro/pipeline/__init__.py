@@ -37,7 +37,12 @@ from repro.core.scheduler import ScheduleResult, tail_cct, total_weighted_cct
 from repro.pipeline.ensemble_batch import (
     AllocationBatch,
     EnsembleBatch,
+    SlotPoolBatch,
     build_ensemble_batch,
+    build_slot_pool_batch,
+    free_slots,
+    set_slot_releases,
+    update_slots,
 )
 from repro.pipeline.pipeline import Pipeline, build_pipeline, get_pipeline
 from repro.pipeline.refine import (
@@ -73,7 +78,12 @@ __all__ = [
     "get_pipeline",
     "EnsembleBatch",
     "AllocationBatch",
+    "SlotPoolBatch",
     "build_ensemble_batch",
+    "build_slot_pool_batch",
+    "update_slots",
+    "set_slot_releases",
+    "free_slots",
     "SchemeSpec",
     "RefineSpec",
     "RefineOutcome",

@@ -45,14 +45,21 @@ import jax
 
 from repro.core import lp as lp_mod
 from repro.core.allocation import Allocation
-from repro.core.coflow import CoflowInstance, flows_of
+from repro.core.coflow import CoflowInstance, flows_of, port_stats
 
 __all__ = [
     "EnsembleBatch",
     "AllocationBatch",
+    "SlotPoolBatch",
     "build_ensemble_batch",
+    "build_slot_pool_batch",
+    "update_slots",
+    "set_slot_releases",
+    "free_slots",
     "expansion_maps",
     "BUILD_COUNT",
+    "SLOT_SCATTER_COUNT",
+    "SLOT_GROW_COUNT",
     "PAD_LB",
 ]
 
@@ -66,6 +73,20 @@ PAD_LB = 1e30
 #: the bucketed LP phase one per bucket) — tests diff this counter to
 #: assert no stage re-pads behind the pipeline's back.
 BUILD_COUNT = 0
+
+#: The **controlled exemption** from the build-once contract: number of
+#: in-place slot scatters (`update_slots` / `free_slots`) into a resident
+#: `SlotPoolBatch`.  The streaming service mutates one long-lived batch
+#: instead of rebuilding per epoch, so its `BUILD_COUNT` stays at the
+#: pool constructions while this counter tracks the epoch updates —
+#: tests diff both to assert the service never silently re-packs.
+SLOT_SCATTER_COUNT = 0
+
+#: Arena regrowths (flow-axis capacity bumps) of resident slot pools —
+#: each one is a new padded flow shape, i.e. one entry of the epoch
+#: compile-cache bucket ladder.  Geometric growth bounds this to
+#: O(log(total flows) / log 2) distinct shapes per pool size.
+SLOT_GROW_COUNT = 0
 
 
 def _round_up(n: int, q: int) -> int:
@@ -479,3 +500,298 @@ def build_ensemble_batch(
         num_instances=B, num_coflows=Ms, num_ports=Ns, num_cores=Ks,
         num_flows=Fs, sharding=sharding,
     )
+
+
+# ---------------------------------------------------------------------------
+# Resident slot pool: one EnsembleBatch updated in place across epochs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SlotPoolBatch:
+    """A long-lived `EnsembleBatch` whose coflow axis is a slot pool.
+
+    The streaming service's device-resident epoch state: **one** batch
+    padded to the pool capacity ``slots`` on the coflow axis, with the
+    flow axis managed as a flat arena of extents (one contiguous extent
+    per occupied slot, capacity fixed at admission, grown in
+    ``flow_quantum`` buckets).  `update_slots` / `free_slots` scatter
+    residual demands, weights, releases and masks **in place** — frozen
+    `EnsembleBatch` fields cannot be rebound, but their array *contents*
+    are mutable, which is exactly the controlled exemption from the
+    build-once contract that `SLOT_SCATTER_COUNT` tracks.
+
+    Why shapes stay fixed: every epoch re-solve consumes the same
+    (slots, flow_capacity, ports, cores)-shaped pytree, so the jitted
+    allocation scan and circuit calendar compile once per arena capacity
+    instead of once per epoch shape — the epoch compile cache is the
+    small ladder of geometrically-grown flow capacities.
+
+    Slot rows are **slot-indexed**, not dense-indexed; parity with the
+    dense rebuild path holds because the batched allocation scan
+    consumes only (port, size, validity) in permuted order — see
+    `repro.streaming.service` for the dense<->slot order mapping.
+    """
+
+    batch: EnsembleBatch
+    member: int  # row the primitives write (0; sharded tails stay masked)
+    flow_quantum: int
+    flow_start: np.ndarray  # (S,) i64 arena offset per slot, -1 = free
+    flow_cap: np.ndarray  # (S,) i64 extent capacity per slot
+    aggregate_rate: float
+    delta: float
+
+    @property
+    def slots(self) -> int:
+        return self.batch.pad_coflows
+
+    @property
+    def flow_capacity(self) -> int:
+        return self.batch.pad_flows
+
+    def occupied(self) -> np.ndarray:
+        """(S,) bool — slots currently holding a coflow."""
+        return self.flow_start >= 0
+
+
+def build_slot_pool_batch(
+    slots: int,
+    num_ports: int,
+    rates: np.ndarray,
+    delta: float,
+    *,
+    flow_quantum: int = 64,
+    mesh=None,
+) -> SlotPoolBatch:
+    """Construct an empty resident pool (counts as ONE build).
+
+    The underlying `EnsembleBatch` is built from a zero-demand template
+    instance with ``slots`` coflows — correct masks, port/core arrays and
+    LP-array shapes — then every slot is marked free.  All later epoch
+    state enters through `update_slots` / `free_slots`.
+    """
+    if slots <= 0:
+        raise ValueError(f"slots must be positive, got {slots}")
+    if flow_quantum <= 0:
+        raise ValueError(f"flow_quantum must be positive, got {flow_quantum}")
+    rates = np.asarray(rates, dtype=np.float64)
+    template = CoflowInstance(
+        demands=np.zeros((slots, num_ports, num_ports)),
+        weights=np.ones(slots),  # placeholder: every slot starts masked
+        releases=np.zeros(slots),
+        rates=rates.copy(),
+        delta=float(delta),
+    )
+    batch = build_ensemble_batch(
+        [template], pad_flows=flow_quantum, mesh=mesh, with_lp_arrays=True
+    )
+    batch.coflow_mask[0, :] = False  # every slot starts free
+    batch.weights[0, :] = 0.0
+    batch.lp_weights[0, :] = 0.0
+    batch.glb[0, :] = 0.0
+    return SlotPoolBatch(
+        batch=batch,
+        member=0,
+        flow_quantum=int(flow_quantum),
+        flow_start=np.full(slots, -1, dtype=np.int64),
+        flow_cap=np.zeros(slots, dtype=np.int64),
+        aggregate_rate=float(rates.sum()),
+        delta=float(delta),
+    )
+
+
+def _arena_gaps(pool: SlotPoolBatch) -> list[tuple[int, int]]:
+    """Free arena intervals [start, stop) in address order."""
+    occ = np.nonzero(pool.flow_start >= 0)[0]
+    ivals = sorted(
+        (int(pool.flow_start[s]), int(pool.flow_cap[s])) for s in occ
+    )
+    gaps, cursor = [], 0
+    for start, cap in ivals:
+        if start > cursor:
+            gaps.append((cursor, start))
+        cursor = start + cap
+    if cursor < pool.flow_capacity:
+        gaps.append((cursor, pool.flow_capacity))
+    return gaps
+
+
+def _compact_arena(pool: SlotPoolBatch) -> None:
+    """Left-pack every occupied extent (address order preserved).
+
+    Flow arena addresses carry no meaning downstream — the allocation
+    permutation orders flows by slot priority, ties by address, and a
+    slot's flows stay contiguous in one extent — so compaction moves
+    extents without touching any schedule output.
+    """
+    b, r = pool.batch, pool.member
+    flow_arrays = (
+        b.flow_coflow, b.flow_src, b.flow_dst, b.flow_pi, b.flow_pj,
+        b.flow_size, b.flow_valid,
+    )
+    occ = np.nonzero(pool.flow_start >= 0)[0]
+    cursor = 0
+    for s in sorted(occ, key=lambda s: int(pool.flow_start[s])):
+        start, cap = int(pool.flow_start[s]), int(pool.flow_cap[s])
+        if start != cursor:  # moving left over a gap: no overlap hazard
+            for arr in flow_arrays:
+                arr[r, cursor:cursor + cap] = arr[r, start:start + cap]
+                arr[r, max(start, cursor + cap):start + cap] = 0
+        pool.flow_start[s] = cursor
+        cursor += cap
+
+
+def _grow_arena(pool: SlotPoolBatch, need: int) -> None:
+    """Geometric flow-capacity growth: a new (bigger) padded flow shape.
+
+    Doubling (rounded to the quantum) keeps the number of distinct arena
+    shapes — and therefore jitted-stage recompiles — logarithmic in the
+    total flow volume; `SLOT_GROW_COUNT` counts the ladder steps.
+    """
+    global SLOT_GROW_COUNT
+    SLOT_GROW_COUNT += 1
+    b = pool.batch
+    new_cap = _round_up(max(need, 2 * pool.flow_capacity), pool.flow_quantum)
+
+    def widen(arr: np.ndarray) -> np.ndarray:
+        out = np.zeros(arr.shape[:1] + (new_cap,), dtype=arr.dtype)
+        out[:, : arr.shape[1]] = arr
+        return out
+
+    pool.batch = dataclasses.replace(
+        b,
+        flow_coflow=widen(b.flow_coflow), flow_src=widen(b.flow_src),
+        flow_dst=widen(b.flow_dst), flow_pi=widen(b.flow_pi),
+        flow_pj=widen(b.flow_pj), flow_size=widen(b.flow_size),
+        flow_valid=widen(b.flow_valid),
+    )
+
+
+def _reserve_extent(pool: SlotPoolBatch, slot: int, count: int) -> int:
+    """Arena offset for `count` flows of `slot`: first-fit, then compact,
+    then grow.  The extent capacity is fixed until the slot is freed (or
+    outgrown — residuals only shrink in the streaming service, so a
+    regrow mid-occupancy means the caller changed the coflow)."""
+    cap = max(int(count), 1)
+    if pool.flow_start[slot] >= 0:
+        if pool.flow_cap[slot] >= cap:
+            return int(pool.flow_start[slot])
+        _release_extent(pool, slot)
+    for lo, hi in _arena_gaps(pool):
+        if hi - lo >= cap:
+            pool.flow_start[slot] = lo
+            pool.flow_cap[slot] = cap
+            return lo
+    used = int(pool.flow_cap[pool.flow_start >= 0].sum())
+    if pool.flow_capacity - used >= cap:
+        _compact_arena(pool)
+    else:
+        _compact_arena(pool)
+        _grow_arena(pool, used + cap)
+    lo = int(pool.flow_cap[pool.flow_start >= 0].sum())
+    pool.flow_start[slot] = lo
+    pool.flow_cap[slot] = cap
+    return lo
+
+
+def _release_extent(pool: SlotPoolBatch, slot: int) -> None:
+    b, r = pool.batch, pool.member
+    start, cap = int(pool.flow_start[slot]), int(pool.flow_cap[slot])
+    if start >= 0:
+        for arr in (
+            b.flow_coflow, b.flow_src, b.flow_dst, b.flow_pi, b.flow_pj,
+            b.flow_size, b.flow_valid,
+        ):
+            arr[r, start:start + cap] = 0
+    pool.flow_start[slot] = -1
+    pool.flow_cap[slot] = 0
+
+
+def update_slots(
+    pool: SlotPoolBatch,
+    slots: np.ndarray,
+    demands: np.ndarray,
+    weights: np.ndarray,
+    releases: np.ndarray,
+) -> None:
+    """Scatter per-slot coflow state into the resident batch, in place.
+
+    ``demands`` is (n, N, N) residual demand per updated slot; weights
+    and releases are (n,).  Recomputes each slot's canonical flow list
+    (largest-first — `flows_of`), port statistics and global lower bound
+    and writes them into the resident arrays: **no rebuild**, the one
+    sanctioned mutation of a frozen `EnsembleBatch` (counted by
+    `SLOT_SCATTER_COUNT`).  Slots whose flow count exceeds their extent
+    re-reserve (first-fit / compact / geometric grow).
+    """
+    global SLOT_SCATTER_COUNT
+    SLOT_SCATTER_COUNT += 1
+    slots = np.asarray(slots, dtype=np.int64)
+    demands = np.asarray(demands, dtype=np.float64)
+    b, r = pool.batch, pool.member
+    for n, s in enumerate(slots):
+        s = int(s)
+        i_idx, j_idx, sizes = flows_of(demands[n], largest_first=True)
+        F = int(i_idx.shape[0])
+        start = _reserve_extent(pool, s, F)
+        b = pool.batch  # _reserve_extent may have regrown the arena
+        cap = int(pool.flow_cap[s])
+        b.flow_coflow[r, start:start + F] = s
+        b.flow_src[r, start:start + F] = i_idx
+        b.flow_dst[r, start:start + F] = j_idx
+        b.flow_pi[r, start:start + F] = i_idx
+        b.flow_pj[r, start:start + F] = b.num_ports[r] + j_idx
+        b.flow_size[r, start:start + F] = sizes
+        b.flow_valid[r, start:start + F] = True
+        b.flow_coflow[r, start + F:start + cap] = 0
+        b.flow_src[r, start + F:start + cap] = 0
+        b.flow_dst[r, start + F:start + cap] = 0
+        b.flow_pi[r, start + F:start + cap] = 0
+        b.flow_pj[r, start + F:start + cap] = 0
+        b.flow_size[r, start + F:start + cap] = 0.0
+        b.flow_valid[r, start + F:start + cap] = False
+        b.flow_counts[r, s] = F
+        rho, tau = port_stats(demands[n])
+        b.lp_rho[r, s, :] = rho[0].astype(np.float32)
+        b.lp_tau[r, s, :] = tau[0].astype(np.float32)
+        b.glb[r, s] = pool.delta + rho[0].max() / pool.aggregate_rate
+    b.weights[r, slots] = weights
+    b.releases[r, slots] = releases
+    b.lp_weights[r, slots] = np.asarray(weights, dtype=np.float32)
+    b.lp_releases[r, slots] = np.asarray(releases, dtype=np.float32)
+    b.coflow_mask[r, slots] = True
+
+
+def set_slot_releases(
+    pool: SlotPoolBatch, slots: np.ndarray, releases: np.ndarray
+) -> None:
+    """Cheap vectorized release refresh (the per-epoch ``max(arrival,
+    now)`` clamp) — no flow or port-stat rescatter."""
+    b, r = pool.batch, pool.member
+    slots = np.asarray(slots, dtype=np.int64)
+    b.releases[r, slots] = releases
+    b.lp_releases[r, slots] = np.asarray(releases, dtype=np.float32)
+
+
+def free_slots(pool: SlotPoolBatch, slots: np.ndarray) -> None:
+    """Release slots back to the pool: masks cleared, extents zeroed.
+
+    Zeroing (not just masking) is deliberate: slot reuse must never leak
+    a previous tenant's demands into a later epoch, and the stale-leak
+    tests diff the raw arrays to enforce it.
+    """
+    global SLOT_SCATTER_COUNT
+    SLOT_SCATTER_COUNT += 1
+    slots = np.asarray(slots, dtype=np.int64)
+    b, r = pool.batch, pool.member
+    for s in slots:
+        _release_extent(pool, int(s))
+    b.flow_counts[r, slots] = 0
+    b.coflow_mask[r, slots] = False
+    b.weights[r, slots] = 0.0
+    b.releases[r, slots] = 0.0
+    b.glb[r, slots] = 0.0
+    b.lp_weights[r, slots] = 0.0
+    b.lp_releases[r, slots] = 0.0
+    b.lp_rho[r, slots, :] = 0.0
+    b.lp_tau[r, slots, :] = 0.0

@@ -46,7 +46,27 @@ from repro.pipeline.refine import (
 )
 from repro.pipeline.spec import SchemeSpec, get_scheme
 
-__all__ = ["Pipeline", "build_pipeline", "get_pipeline"]
+__all__ = ["Pipeline", "build_pipeline", "get_pipeline", "order_view"]
+
+
+def order_view(weights, glb, releases, coflow_mask):
+    """Minimal batch an ordering stage's ``order_batch`` accepts.
+
+    Every `OrderStage.order_batch` implementation reads exactly four
+    per-coflow fields of the ensemble — ``weights``, ``glb``,
+    ``releases`` (all (Bp, Mp) f64) and ``coflow_mask`` — plus the
+    separately-passed LP completion.  This view packages arbitrary
+    arrays under that contract so callers that keep their own resident
+    representation (the streaming service's slot pool, gathered to the
+    dense convention) can run the *same* ordering code as `run_batch`
+    without building an `EnsembleBatch`.  Masked (padding) entries sort
+    to the tail in index order, exactly as in the full batch.
+    """
+    import types
+
+    return types.SimpleNamespace(
+        weights=weights, glb=glb, releases=releases, coflow_mask=coflow_mask
+    )
 
 #: Reserved `stage_cache` keys: the ensemble fingerprint guarding against
 #: cross-ensemble reuse, and the shared `EnsembleBatch` built once per

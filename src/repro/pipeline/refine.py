@@ -32,8 +32,10 @@ Here the search itself becomes batch members.  Each round:
   4. **select** — per-instance winners under the canonical
      tolerance/tie-break rule (`repro.core.localsearch.select_candidate`:
      accept only > tol improvements, lowest candidate index wins ties),
-     update incumbents and elite pools, freeze instances that stop
-     improving, and stop when everyone has.
+     update incumbents and elite pools, freeze instances whose incumbent
+     has been stale for ``stop_after_stale`` consecutive rounds (default:
+     one — freeze on the first non-improving round), and stop when
+     everyone has.
 
 `refine_sequential` is the per-instance oracle: the same generators,
 rounds and selection evaluated one candidate at a time through any
@@ -99,6 +101,11 @@ def as_refine_spec(refine) -> RefineSpec:
         raise ValueError(
             f"unknown refine generator(s) {unknown}; "
             f"expected {REFINE_GENERATORS}"
+        )
+    if spec.stop_after_stale is not None and spec.stop_after_stale < 1:
+        raise ValueError(
+            f"refine stop_after_stale must be None or >= 1, "
+            f"got {spec.stop_after_stale}"
         )
     return spec
 
@@ -258,6 +265,8 @@ def refine_batch_arrays(
     Ms = ensemble.num_coflows
     cursors = [0] * B
     elites: list[list[tuple[float, np.ndarray]]] = [[] for _ in range(B)]
+    stale_limit = 1 if spec.stop_after_stale is None else spec.stop_after_stale
+    stale = np.zeros(B, dtype=np.int64)
     done = np.zeros(B, dtype=bool)
     base = np.zeros(B)
     cur = np.zeros(B)
@@ -308,8 +317,11 @@ def refine_batch_arrays(
             )
             cur[b] = objs[win]
             if win == 0:
-                done[b] = True
+                stale[b] += 1
+                if stale[b] >= stale_limit:
+                    done[b] = True
             else:
+                stale[b] = 0
                 orders[b, :M] = cand_lists[b][win]
     return RefineOutcome(
         orders=orders, objective=cur, base_objective=base,
@@ -339,6 +351,8 @@ def refine_sequential(
     order = np.asarray(order, dtype=np.int64).copy()
     cursor = 0
     elites: list[tuple[float, np.ndarray]] = []
+    stale_limit = 1 if spec.stop_after_stale is None else spec.stop_after_stale
+    stale = 0
     base = cur = None
     evals = 0
     rounds_done = 0
@@ -358,6 +372,10 @@ def refine_sequential(
         )
         cur = float(objs[win])
         if win == 0:
-            break
-        order = all_c[win].copy()
+            stale += 1
+            if stale >= stale_limit:
+                break
+        else:
+            stale = 0
+            order = all_c[win].copy()
     return order, cur, base, rounds_done, evals

@@ -64,6 +64,15 @@ class RefineSpec:
       sigma: perturbation strength in order-position units.
       elites: per-instance elite-pool size for crossover parents.
       tol: accept/tie tolerance (see `repro.core.localsearch.TOL`).
+      stop_after_stale: freeze an instance after this many CONSECUTIVE
+        non-improving rounds (the stale counter resets whenever a round
+        improves the incumbent).  ``None`` keeps the historical rule of
+        freezing on the first stale round (equivalent to ``1``); larger
+        values let the rolling adjacent window and fresh perturbation
+        streams keep probing a stuck incumbent for a few more rounds
+        before giving up on it.  Frozen instances stop contributing
+        candidate evaluations, so the spent budget adapts per instance
+        instead of always being ``rounds × candidates``.
     """
 
     rounds: int = 2
@@ -73,6 +82,7 @@ class RefineSpec:
     sigma: float = 2.0
     elites: int = 4
     tol: float = 1e-9
+    stop_after_stale: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,6 +28,8 @@ from __future__ import annotations
 
 from collections import deque
 
+import numpy as np
+
 __all__ = ["ADMISSION_POLICIES", "SlotPool"]
 
 ADMISSION_POLICIES = ("fifo", "weighted", "size_aware")
@@ -129,8 +131,33 @@ class SlotPool:
             admitted.append(m)
         return admitted
 
+    def active_array(self) -> np.ndarray:
+        """`active_ids` as an i64 array (the vectorized drain/epoch path)."""
+        return np.fromiter(sorted(self._slot_of), dtype=np.int64,
+                           count=len(self._slot_of))
+
+    def slots_of(self, coflows) -> np.ndarray:
+        """(n,) i64 slot ids for the given global coflow ids."""
+        return np.fromiter((self._slot_of[int(m)] for m in coflows),
+                           dtype=np.int64, count=len(coflows))
+
     def release(self, coflow: int) -> int:
         """Free the slot held by `coflow`; returns the freed slot id."""
         s = self._slot_of.pop(coflow)
         self._slot_coflow[s] = -1
         return s
+
+    def release_many(self, coflows) -> np.ndarray:
+        """Free every listed coflow's slot in one call.
+
+        Returns the freed slot ids as an i64 array (aligned with the
+        input order) — the batched drain path: one `release_many` +
+        one `_WarmState.forget_slots` per epoch instead of a Python
+        release/forget round-trip per drained coflow.
+        """
+        coflows = [int(m) for m in coflows]
+        slots = np.fromiter((self._slot_of.pop(m) for m in coflows),
+                            dtype=np.int64, count=len(coflows))
+        for s in slots:
+            self._slot_coflow[s] = -1
+        return slots

@@ -10,27 +10,58 @@ Event loop (one *epoch* per event):
      arrived).  The default (``batch_window=None``) re-solves once per
      distinct arrival instant.
   2. **Advance.**  At epoch time ``now`` the incumbent calendar is
-     settled: flows with ``complete <= now`` are delivered (their exact
-     size leaves the residual demand), flows with ``establish >= now``
-     are cancelled back into the pool, and in-flight flows are either
-     *preempted* (``preempt=True``: the bytes sent so far leave the
-     residual; the remainder re-pays the reconfiguration delta when it
-     is re-established) or *committed* (``preempt=False``: the flow runs
+     settled — one masked array pass over the calendar rows: flows with
+     ``complete <= now`` are delivered (their exact size leaves the
+     residual demand), flows with ``establish >= now`` are cancelled
+     back into the pool, and in-flight flows are either *preempted*
+     (``preempt=True``: the bytes sent so far leave the residual; the
+     remainder re-pays the reconfiguration delta when it is
+     re-established) or *committed* (``preempt=False``: the flow runs
      to completion as a phantom busy circuit blocking its port pair in
      every later calendar — see ``schedule_batch_arrays(busy=...)``).
-     Coflows whose residual reaches zero free their pool slot.
+     Coflows whose residual reaches zero free their pool slot (one
+     batched ``release_many`` / ``forget_slots`` per epoch).
   3. **Admit.**  Queued arrivals take free slots in ring order
      (`repro.streaming.pool.SlotPool`); overflow waits (admission
      latency is reported per coflow).
-  4. **Re-solve.**  The active set becomes a dense residual
-     `CoflowInstance` (coflows in ascending global-id order, releases
-     clamped to ``max(arrival, now)``) and runs the *same* stages as the
-     offline `Pipeline.run_batch`: ordering LP → masked stable order →
-     batched allocation scan → batched circuit calendar.  The ordering
-     LP is warm-started: the previous epoch's precedence iterate is
-     stored per slot pair and seeds ``Y0`` for every pair of coflows
-     that was already solved together, and warm epochs run
-     ``lp_iters_warm`` (< ``lp_iters``) subgradient steps.
+  4. **Re-solve.**  The active set runs the *same* stages as the offline
+     `Pipeline.run_batch`: ordering LP → masked stable order → batched
+     allocation scan → batched circuit calendar.  The ordering LP is
+     warm-started: the previous epoch's precedence iterate is stored per
+     slot pair and seeds ``Y0`` for every pair of coflows that was
+     already solved together, and warm epochs run ``lp_iters_warm``
+     (< ``lp_iters``) subgradient steps.
+
+Epoch modes (``epoch_mode``):
+
+  * ``"rebuild"`` — the PR 7 path: every epoch packs a dense residual
+    `CoflowInstance` and builds a fresh `EnsembleBatch`.  Each distinct
+    (active count, flow count) is a new padded shape, so the jitted
+    stages retrace nearly every epoch; kept as the oracle the resident
+    mode is parity-tested against, and as the host of the per-epoch
+    exact LP (``lp_method="exact"``).
+  * ``"resident"`` — the device-resident path: ONE `EnsembleBatch`
+    padded to the pool capacity `S` lives for the whole stream
+    (`repro.pipeline.ensemble_batch.SlotPoolBatch`); epochs scatter
+    residuals/weights/releases into occupied slots in place
+    (`update_slots` / `free_slots` — the controlled build-once
+    exemption) and drive LP → order → alloc → circuit off the resident
+    arrays at **fixed** padded shapes, so after warm-up no stage
+    retraces (the only new shapes are the geometric flow-arena growth
+    ladder — the epoch compile-cache buckets).  The `_WarmState`
+    precedence matrix lives on device and is gathered/scattered by slot
+    index inside small jits (`repro.core.lp.warm_gather_device` /
+    ``warm_scatter_device``).  With ``warm_start=False`` the resident
+    epoch is **bit-identical** to the rebuild epoch: the dense-gathered
+    LP inputs equal `pack_lp_arrays`'s output at the same padded shapes
+    (so the same compiled program produces the same floats), the dense
+    order view sorts the same keys, and the slot-space allocation scan
+    differs from the dense one only by invalid no-op steps.  Warm
+    streams may differ from rebuild by f32 rounding (device-side
+    ``1 - y`` vs. the host's f64 round-trip) — the bound and structural
+    invariants are asserted either way.
+  * ``"auto"`` (default) — ``"resident"`` for the batched subgradient
+    solver, ``"rebuild"`` for ``lp_method="exact"``.
 
 With one arrival batch and preemption disabled the loop degenerates to
 exactly one epoch whose instance *is* the offline instance, so orders,
@@ -48,16 +79,29 @@ from typing import Any
 
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core import lp
 from repro.core.allocation import Allocation
+from repro.core.circuit import CoreSchedule
 from repro.core.coflow import CoflowInstance
 from repro.core.validate import validate_schedule
 from repro.pipeline import build_ensemble_batch, get_pipeline
+from repro.pipeline.pipeline import order_view
 from repro.pipeline.batch_circuit import schedule_batch_arrays
+from repro.pipeline.ensemble_batch import (
+    _round_up,
+    build_slot_pool_batch,
+    free_slots,
+    set_slot_releases,
+    update_slots,
+)
 from repro.pipeline.stages import ListCircuit
 from repro.streaming.pool import SlotPool
 
-__all__ = ["EpochRecord", "StreamResult", "stream"]
+__all__ = ["EPOCH_MODES", "EpochRecord", "StreamResult", "stream"]
+
+EPOCH_MODES = ("auto", "rebuild", "resident")
 
 
 @dataclasses.dataclass
@@ -69,7 +113,7 @@ class EpochRecord:
     actives: np.ndarray  # global coflow ids, dense order (ascending id)
     admitted: np.ndarray  # global ids admitted at this epoch
     order: np.ndarray  # global ids, highest priority first
-    allocation: Allocation  # epoch-dense coflow indexing
+    allocation: Allocation | None  # epoch-dense coflow indexing
     ccts: np.ndarray  # (Me,) projected absolute completions, dense
     lp: lp.LPSolution | None
     warm: bool  # LP seeded from the previous iterate
@@ -77,6 +121,7 @@ class EpochRecord:
     lp_wall_s: float
     num_busy: int  # phantom committed circuits carried in
     wall_s: float
+    lp_objective: float | None = None  # kept even when `lp` is dropped
 
 
 @dataclasses.dataclass
@@ -99,6 +144,7 @@ class StreamResult:
     lp_time_s: float
     wall_time_s: float
     admission_policy: str = "fifo"  # slot-pool policy (see SlotPool)
+    epoch_mode: str = "rebuild"  # resolved epoch driver (never "auto")
 
     @property
     def realized_weighted_cct(self) -> float:
@@ -153,7 +199,9 @@ class StreamResult:
                 warm=e.warm,
                 lp_iters_used=e.lp_iters_used,
                 lp_objective=(
-                    float(e.lp.objective) if e.lp is not None else None
+                    e.lp_objective
+                    if e.lp_objective is not None
+                    else (float(e.lp.objective) if e.lp is not None else None)
                 ),
                 lp_wall_s=e.lp_wall_s,
                 wall_s=e.wall_s,
@@ -171,6 +219,7 @@ class StreamResult:
             warm_start=self.warm_start,
             pool_size=self.pool_size,
             admission_policy=self.admission_policy,
+            epoch_mode=self.epoch_mode,
             num_coflows=int(self.weights.shape[0]),
             realized_weighted_cct=self.realized_weighted_cct,
             num_resolves=self.num_resolves,
@@ -211,12 +260,26 @@ class _WarmState:
     upper triangle) makes the gather orientation-free: dense pair
     (i, j), i < j reads ``Y[s_i, s_j]`` whatever the slot order is.
     A slot's rows go stale the moment it is freed (``solved`` cleared).
+
+    ``device=True`` (the resident epoch mode) keeps ``Y`` as a device
+    (S, S) f32 array for the life of the stream: epochs gather it into
+    the dense warm start and scatter the solved pairs back through
+    fixed-shape jits (`repro.core.lp.warm_gather_device` /
+    ``warm_scatter_device``) — the precedence matrix never round-trips
+    through the host.  Only the tiny (S,) ``solved`` mask stays
+    host-side (it feeds pre-solve control flow and per-free forgets).
     """
 
-    def __init__(self, size: int):
-        self.Y = np.zeros((size, size), dtype=np.float32)
+    def __init__(self, size: int, device: bool = False):
+        self.size = size
+        self.device = device
+        if device:
+            self.Y = jnp.zeros((size, size), dtype=jnp.float32)
+        else:
+            self.Y = np.zeros((size, size), dtype=np.float32)
         self.solved = np.zeros(size, dtype=bool)
 
+    # -- host path (rebuild mode) -----------------------------------------
     def gather(self, slots: np.ndarray, default_Y0: np.ndarray) -> tuple:
         """Warm Y0 for the dense active set; returns (Y0, any_warm)."""
         prev = self.solved[slots]
@@ -230,8 +293,123 @@ class _WarmState:
         self.Y[np.ix_(slots, slots)] = precedence.astype(np.float32)
         self.solved[slots] = True
 
+    # -- device path (resident mode) --------------------------------------
+    def gather_device(self, slots_padded: np.ndarray, default_Y0) -> tuple:
+        """Device warm Y0 ((S, S) f32) for dense positions ``slots_padded``
+        (padded with the out-of-range index S); returns (Y0, any_warm)."""
+        Y0, any_warm = lp.warm_gather_device(
+            self.Y, jnp.asarray(self.solved), jnp.asarray(slots_padded),
+            default_Y0,
+        )
+        return Y0, bool(any_warm)
+
+    def scatter_device(
+        self, slots_padded: np.ndarray, slots: np.ndarray, y_dense
+    ) -> None:
+        """Write the solver's dense strict-upper ``y`` back at slot pairs."""
+        self.Y = lp.warm_scatter_device(
+            self.Y, jnp.asarray(slots_padded), y_dense
+        )
+        self.solved[slots] = True
+
+    # -- shared ------------------------------------------------------------
+    def forget_slots(self, slots) -> None:
+        """Batch-invalidate freed slots (one scatter per drain event)."""
+        self.solved[np.asarray(slots, dtype=np.int64)] = False
+
     def forget(self, slot: int) -> None:
-        self.solved[slot] = False
+        self.forget_slots(np.asarray([slot], dtype=np.int64))
+
+
+@dataclasses.dataclass
+class _Calendar:
+    """Incumbent calendar as parallel arrays: one row per scheduled flow.
+
+    The `_advance` settlement is a handful of masked array ops over these
+    rows instead of a Python loop — (m, i, j) triples are unique within a
+    calendar (a flow is placed on exactly one core and scheduled once),
+    so plain fancy-indexed subtraction settles residuals exactly.
+    """
+
+    m: np.ndarray  # (n,) global coflow ids
+    k: np.ndarray  # (n,) core ids
+    i: np.ndarray  # (n,) ingress ports
+    j: np.ndarray  # (n,) egress ports
+    size: np.ndarray  # (n,) scheduled sizes
+    est: np.ndarray  # (n,) establish times
+    comp: np.ndarray  # (n,) completion times
+
+    @classmethod
+    def empty(cls) -> "_Calendar":
+        z = np.zeros(0)
+        zi = np.zeros(0, dtype=np.int64)
+        return cls(zi, zi, zi, zi, z, z, z)
+
+    @classmethod
+    def from_schedules(
+        cls, schedules: list[CoreSchedule], coflow_map: np.ndarray
+    ) -> "_Calendar":
+        """Concatenate per-core schedules; ``coflow_map`` sends the
+        schedules' coflow ids (dense or slot) to global ids."""
+        ms, ks, is_, js, sz, es, cp = [], [], [], [], [], [], []
+        for k, cs in enumerate(schedules):
+            if len(cs.coflow) == 0:
+                continue
+            ms.append(coflow_map[cs.coflow])
+            ks.append(np.full(len(cs.coflow), k, dtype=np.int64))
+            is_.append(np.asarray(cs.src, dtype=np.int64))
+            js.append(np.asarray(cs.dst, dtype=np.int64))
+            sz.append(np.asarray(cs.size, dtype=np.float64))
+            es.append(np.asarray(cs.establish, dtype=np.float64))
+            cp.append(np.asarray(cs.complete, dtype=np.float64))
+        if not ms:
+            return cls.empty()
+        return cls(
+            np.concatenate(ms), np.concatenate(ks), np.concatenate(is_),
+            np.concatenate(js), np.concatenate(sz), np.concatenate(es),
+            np.concatenate(cp),
+        )
+
+
+@dataclasses.dataclass
+class _Busy:
+    """Committed in-flight circuits as parallel arrays (k, i, j, end)."""
+
+    k: np.ndarray
+    i: np.ndarray
+    j: np.ndarray
+    end: np.ndarray
+
+    @classmethod
+    def empty(cls) -> "_Busy":
+        zi = np.zeros(0, dtype=np.int64)
+        return cls(zi, zi, zi, np.zeros(0))
+
+    def keep_after(self, now: float) -> "_Busy":
+        sel = self.end > now
+        return _Busy(self.k[sel], self.i[sel], self.j[sel], self.end[sel])
+
+    def extend(self, k, i, j, end) -> "_Busy":
+        return _Busy(
+            np.concatenate([self.k, k]), np.concatenate([self.i, i]),
+            np.concatenate([self.j, j]), np.concatenate([self.end, end]),
+        )
+
+    def tables(self, now: float, num_cores: int) -> dict | None:
+        """`schedule_batch_arrays(busy=...)` phantom tables (or None)."""
+        if self.k.size == 0:
+            return None
+        tabs = {}
+        for k in range(num_cores):
+            sel = self.k == k
+            n = int(sel.sum())
+            if n:
+                tabs[0, k] = dict(
+                    src=self.i[sel], dst=self.j[sel],
+                    rel=np.full(n, now, dtype=np.float64),
+                    dur=self.end[sel] - now,
+                )
+        return tabs
 
 
 def _arrival_batches(
@@ -294,6 +472,8 @@ def stream(
     warm_start: bool = True,
     validate: bool = True,
     admission: str = "fifo",
+    epoch_mode: str = "auto",
+    flow_quantum: int = 64,
 ) -> StreamResult:
     """Schedule `instance`'s coflows online, admitting by release time.
 
@@ -305,7 +485,16 @@ def stream(
     tests).  ``admission`` picks the slot-pool policy under contention
     (``"fifo"`` / ``"weighted"`` / ``"size_aware"``, see
     `repro.streaming.pool.SlotPool`); it only matters when ``pool_size``
-    binds.  See the module docstring for the event-loop semantics; with
+    binds.  ``epoch_mode`` selects the epoch driver (see the module
+    docstring): ``"resident"`` keeps one slot-pool `EnsembleBatch` and
+    the warm-state precedence matrix device-resident across epochs so
+    re-solves stop retracing; ``"rebuild"`` re-packs per epoch (PR 7);
+    ``"auto"`` picks resident for the batched solver.  ``flow_quantum``
+    quantizes the resident flow arena: capacity starts at one quantum
+    (or the stream's expected concurrent flow count, whichever is
+    larger) and grows geometrically, so arena shapes — the epoch compile
+    -cache buckets — stay logarithmic in the trace's flow volume.  See
+    the module docstring for the event-loop semantics; with
     ``n_batches=1`` and ``preempt=False`` the run replays the offline
     `Pipeline.run_batch` bit for bit.
     """
@@ -313,6 +502,18 @@ def stream(
     M = instance.num_coflows
     if lp_method not in ("batch", "exact"):
         raise ValueError(f"lp_method must be 'batch' or 'exact', {lp_method!r}")
+    if epoch_mode not in EPOCH_MODES:
+        raise ValueError(
+            f"epoch_mode must be one of {EPOCH_MODES}, got {epoch_mode!r}"
+        )
+    if epoch_mode == "auto":
+        epoch_mode = "resident" if lp_method == "batch" else "rebuild"
+    if epoch_mode == "resident" and lp_method == "exact":
+        raise ValueError(
+            "epoch_mode='resident' drives the batched subgradient solver "
+            "off the resident slot pool; use lp_method='batch' (or "
+            "epoch_mode='rebuild' for per-epoch exact LPs)"
+        )
     if lp_iters_warm is None:
         lp_iters_warm = max(lp_iters // 3, 1)
 
@@ -347,58 +548,100 @@ def stream(
         epochs=[], lp_time_s=0.0, wall_time_s=0.0,
     )
     result.admission_policy = admission
+    result.epoch_mode = epoch_mode
     if M == 0:
         result.wall_time_s = time.perf_counter() - t_start
         return result
 
+    rates_by_core = np.asarray(instance.rates, dtype=np.float64)
+    residual = np.asarray(instance.demands, dtype=np.float64).copy()
     pool = SlotPool(
         S,
         policy=admission,
         weights=result.weights,
-        sizes=np.asarray(instance.demands, dtype=np.float64)
-        .reshape(M, -1)
-        .sum(axis=1),
+        sizes=residual.reshape(M, -1).sum(axis=1),
     )
-    warm = _WarmState(S)
-    residual = np.asarray(instance.demands, dtype=np.float64).copy()
+    resident = epoch_mode == "resident"
+    warm = _WarmState(S, device=resident)
+    rpool = None
+    slot_to_global = None
+    if resident:
+        # Size the arena so a full pool of average coflows fits without
+        # growth; the geometric ladder covers estimate misses.
+        nnz = int(np.count_nonzero(residual))
+        expected = -(-nnz * min(S, M) // M) if M else 0
+        rpool = build_slot_pool_batch(
+            S, instance.num_ports, rates_by_core, instance.delta,
+            flow_quantum=_round_up(
+                max(int(flow_quantum), expected, 1), max(int(flow_quantum), 1)
+            ),
+        )
+        slot_to_global = np.full(S, -1, dtype=np.int64)
     finished = np.zeros(M, dtype=bool)
-    # Incumbent calendar: (m, k, i, j, size, establish, complete) rows.
-    incumbent: list[tuple] = []
-    # Committed (non-preemptible) circuits still in flight: (k, i, j, end).
-    busy_list: list[tuple] = []
-    last_ccts: dict[int, float] = {}  # projected completion per active id
+    calendar = _Calendar.empty()
+    busy = _Busy.empty()
+    last_ccts = np.zeros(M)  # projected completion per active id
     two_pi_ports = 2 * instance.num_ports  # flat port axis for LP padding
 
-    def _advance(now: float) -> None:
-        """Settle the incumbent calendar at `now`; free drained slots."""
-        nonlocal incumbent, busy_list
-        new_busy = []
-        for m, k, i, j, size, est, comp in incumbent:
-            if comp <= now:  # delivered in full
-                residual[m, i, j] -= size
-                result.finish[m] = max(result.finish[m], comp)
-            elif est < now:  # in flight
-                if preempt:
-                    rate = float(instance.rates[k])
-                    sent = rate * max(0.0, now - est - instance.delta)
-                    if sent >= size:  # complete within float rounding
-                        residual[m, i, j] -= size
-                        result.finish[m] = max(result.finish[m], comp)
-                    else:
-                        residual[m, i, j] -= sent
-                else:  # committed: runs to completion as a phantom
-                    residual[m, i, j] -= size
-                    result.finish[m] = max(result.finish[m], comp)
-                    new_busy.append((k, i, j, comp))
-            # else: not yet established — cancelled back into the pool.
-        incumbent = []
+    def _advance(now: float) -> np.ndarray:
+        """Settle the incumbent calendar at `now`; free drained slots.
+
+        Returns the global ids whose residual changed and who are still
+        active (the slots the resident pool must re-scatter)."""
+        nonlocal calendar, busy
+        dirty = np.zeros(0, dtype=np.int64)
+        if calendar.m.size:
+            delivered = calendar.comp <= now
+            started = calendar.est < now
+            if preempt:
+                inflight = ~delivered & started
+                sent = rates_by_core[calendar.k] * np.maximum(
+                    0.0, now - calendar.est - instance.delta
+                )
+                full = inflight & (sent >= calendar.size)
+                deliver = delivered | full  # complete within float rounding
+                partial = inflight & ~full
+            else:  # committed: in-flight runs to completion as a phantom
+                deliver = delivered | started
+                partial = np.zeros_like(deliver)
+            # (m, i, j) rows are unique per calendar — no accumulation.
+            residual[
+                calendar.m[deliver], calendar.i[deliver], calendar.j[deliver]
+            ] -= calendar.size[deliver]
+            if partial.any():
+                residual[
+                    calendar.m[partial], calendar.i[partial],
+                    calendar.j[partial],
+                ] -= sent[partial]
+            np.maximum.at(
+                result.finish, calendar.m[deliver], calendar.comp[deliver]
+            )
+            dirty = np.unique(calendar.m[deliver | partial])
+            busy = busy.keep_after(now)
+            if not preempt:
+                committed = ~delivered & started
+                busy = busy.extend(
+                    calendar.k[committed], calendar.i[committed],
+                    calendar.j[committed], calendar.comp[committed],
+                )
+            # Rows with est >= now were never established — cancelled
+            # back into the pool with their residual untouched.
+            calendar = _Calendar.empty()
+        else:
+            busy = busy.keep_after(now)
         np.maximum(residual, 0.0, out=residual)  # exact-0 guard only
-        busy_list = [bz for bz in busy_list if bz[3] > now] + new_busy
-        for m in pool.active_ids():
-            if not residual[m].any():
-                finished[m] = True
-                last_ccts.pop(m, None)
-                warm.forget(pool.release(m))
+        act = pool.active_array()
+        if act.size:
+            drained = act[~residual[act].reshape(act.size, -1).any(axis=1)]
+            if drained.size:
+                finished[drained] = True
+                slots = pool.release_many(drained)
+                warm.forget_slots(slots)
+                if resident:
+                    free_slots(rpool, slots)
+                    slot_to_global[slots] = -1
+                dirty = np.setdiff1d(dirty, drained, assume_unique=True)
+        return dirty
 
     def _admit(now: float) -> list[int]:
         """Move queued arrivals into free slots (ring order, FIFO)."""
@@ -416,9 +659,12 @@ def stream(
                     finished[m] = True
                     warm.forget(pool.release(m))
 
-    def _epoch(now: float, admitted: list[int]) -> None:
-        """Re-solve the active residual set; install the new calendar."""
-        nonlocal incumbent
+    def _busy_count() -> int:
+        return int(busy.k.size)
+
+    def _epoch_rebuild(now: float, admitted: list[int]) -> None:
+        """PR 7 epoch: dense residual instance, fresh `EnsembleBatch`."""
+        nonlocal calendar
         t_epoch = time.perf_counter()
         actives = pool.active_ids()
         if not actives:
@@ -429,7 +675,7 @@ def stream(
             demands=residual[act].copy(),
             weights=result.weights[act].copy(),
             releases=np.maximum(result.arrival[act], now),
-            rates=np.asarray(instance.rates, dtype=np.float64).copy(),
+            rates=rates_by_core.copy(),
             delta=instance.delta,
         )
 
@@ -445,9 +691,7 @@ def stream(
                 arrays = lp.pack_lp_arrays(
                     [inst_e], pad_coflows=S, pad_ports=two_pi_ports
                 )
-                slots = np.asarray(
-                    [pool.slot_of(m) for m in actives], dtype=np.int64
-                )
+                slots = pool.slots_of(actives)
                 if warm_start:
                     Y0, is_warm = warm.gather(
                         slots, arrays["Y0"][0, :Me, :Me]
@@ -472,42 +716,18 @@ def stream(
         alloc_batch = pipe.allocate_stage.allocate_batch_arrays(
             ensemble, orders_arr
         )
-        busy = None
-        if busy_list:
-            busy = {}
-            for k in range(instance.num_cores):
-                rows = [bz for bz in busy_list if bz[0] == k]
-                if rows:
-                    busy[0, k] = dict(
-                        src=np.asarray([r[1] for r in rows], np.int64),
-                        dst=np.asarray([r[2] for r in rows], np.int64),
-                        rel=np.full(len(rows), now, dtype=np.float64),
-                        dur=np.asarray(
-                            [r[3] - now for r in rows], np.float64
-                        ),
-                    )
+        busy_tabs = busy.tables(now, instance.num_cores)
         pairs = schedule_batch_arrays(
             ensemble, alloc_batch,
             discipline=circuit.discipline, engine=circuit.engine,
-            busy=busy,
+            busy=busy_tabs,
         )
         schedules, ccts_e = pairs[0]
         if validate:
             validate_schedule(inst_e, schedules)
 
-        incumbent = []
-        for k, cs in enumerate(schedules):
-            for f in range(len(cs.coflow)):
-                incumbent.append(
-                    (
-                        int(act[cs.coflow[f]]), k,
-                        int(cs.src[f]), int(cs.dst[f]),
-                        float(cs.size[f]),
-                        float(cs.establish[f]), float(cs.complete[f]),
-                    )
-                )
-        for d, m in enumerate(actives):
-            last_ccts[m] = float(ccts_e[d])
+        calendar = _Calendar.from_schedules(schedules, act)
+        last_ccts[act] = np.asarray(ccts_e, dtype=np.float64)
 
         alloc = alloc_batch.materialize(ensemble)[0]
         order_dense = np.asarray(orders_arr[0][:Me])
@@ -524,44 +744,218 @@ def stream(
                 warm=is_warm,
                 lp_iters_used=iters_used,
                 lp_wall_s=lp_wall,
-                num_busy=0 if busy is None else len(busy_list),
+                num_busy=0 if busy_tabs is None else _busy_count(),
                 wall_s=time.perf_counter() - t_epoch,
+                lp_objective=(
+                    float(lp_sol.objective) if lp_sol is not None else None
+                ),
             )
         )
 
-    # --- event loop -------------------------------------------------------
-    for now, ids in _arrival_batches(result.arrival, n_batches, batch_window):
-        _advance(now)
-        pool.push(ids)
-        admitted = _admit(now)
-        _epoch(now, admitted)
-
-    while pool.queue:  # pool-bound overflow: admit as slots drain
+    def _epoch_resident(
+        now: float, admitted: list[int], dirty: np.ndarray
+    ) -> None:
+        """Device-resident epoch: scatter into the slot pool, solve at
+        fixed padded shapes, read the calendar back in slot space."""
+        nonlocal calendar
+        t_epoch = time.perf_counter()
         actives = pool.active_ids()
         if not actives:
+            return
+        act = np.asarray(actives, dtype=np.int64)
+        Me = act.shape[0]
+        slots = pool.slots_of(actives)  # aligned with ascending-id order
+        rel_clamped = np.maximum(result.arrival[act], now)
+
+        # In-place slot scatter: residuals that changed since the last
+        # epoch (settled/preempted) plus fresh admissions; every active
+        # slot gets the per-epoch release clamp.
+        upd = np.union1d(np.asarray(admitted, dtype=np.int64), dirty)
+        if upd.size:
+            upd_slots = pool.slots_of(upd)
+            update_slots(
+                rpool, upd_slots, residual[upd], result.weights[upd],
+                np.maximum(result.arrival[upd], now),
+            )
+            slot_to_global[upd_slots] = upd
+        set_slot_releases(rpool, slots, rel_clamped)
+        b = rpool.batch
+
+        lp_sol_objective = None
+        is_warm = False
+        iters_used = 0
+        lp_wall = 0.0
+        comp_dense = None
+        if needs_lp:
+            t_lp = time.perf_counter()
+            # Dense-gathered LP inputs: bit-equal to
+            # `pack_lp_arrays([inst_e], pad_coflows=S, pad_ports=2N)`
+            # (per-slot f32 rows were cast from the same f64 values at
+            # scatter time), so the same compiled solver program runs —
+            # zero LP retraces across epochs.
+            Y0_default = np.zeros((S, S), dtype=np.float32)
+            Y0_default[:Me, :Me] = lp.warm_start_Y0_dense(
+                result.weights[act], b.glb[0, slots]
+            )
+            slots_padded = np.full(S, S, dtype=np.int32)
+            slots_padded[:Me] = slots
+            if warm_start:
+                Y0_dev, is_warm = warm.gather_device(
+                    slots_padded, jnp.asarray(Y0_default)
+                )
+            else:
+                Y0_dev = jnp.asarray(Y0_default)
+            rho_d = np.zeros_like(b.lp_rho)
+            tau_d = np.zeros_like(b.lp_tau)
+            w_d = np.zeros_like(b.lp_weights)
+            r_d = np.zeros_like(b.lp_releases)
+            mask_d = np.zeros_like(b.coflow_mask)
+            rho_d[0, :Me] = b.lp_rho[0, slots]
+            tau_d[0, :Me] = b.lp_tau[0, slots]
+            w_d[0, :Me] = b.lp_weights[0, slots]
+            r_d[0, :Me] = b.lp_releases[0, slots]
+            mask_d[0, :Me] = True
+            arrays = dict(
+                Y0=Y0_dev[None], p_rho=rho_d, p_tau=tau_d, weights=w_d,
+                releases=r_d, inv_R=b.inv_R, delta_over_K=b.delta_over_K,
+                coflow_mask=mask_d, port_mask=b.port_mask,
+            )
+            iters_used = lp_iters_warm if is_warm else lp_iters
+            batch_sol = lp.solve_subgradient_batch_arrays(
+                arrays, iters=iters_used
+            )
+            comp_dense = np.asarray(batch_sol.completion)[0]
+            lp_sol_objective = float(np.asarray(batch_sol.objective)[0])
+            warm.scatter_device(slots_padded, slots, batch_sol.y[0])
+            lp_wall = time.perf_counter() - t_lp
+            result.lp_time_s += lp_wall
+
+        # Dense ordering view over the resident vectors (gathered to the
+        # ascending-global-id dense convention, masked padding at the
+        # tail) — the same keys, masks and stable sort as the rebuild
+        # path, so dense positions 0..Me-1 order identically.
+        w64 = np.zeros((1, S))
+        glb64 = np.zeros((1, S))
+        rel64 = np.zeros((1, S))
+        mask64 = np.zeros((1, S), dtype=bool)
+        w64[0, :Me] = b.weights[0, slots]
+        glb64[0, :Me] = b.glb[0, slots]
+        rel64[0, :Me] = rel_clamped
+        mask64[0, :Me] = True
+        view = order_view(w64, glb64, rel64, mask64)
+        if needs_lp:
+            comp = np.zeros((1, S))
+            comp[0, :Me] = comp_dense[:Me]
+            orders_dense = order_stage.order_batch(view, comp)
+        else:
+            orders_dense = order_stage.order_batch(view)
+        order_dense = np.asarray(orders_dense[0][:Me])
+
+        # Slot-space order: active slots by dense priority, free slots at
+        # the tail (their flows are invalid — exact no-op scan steps).
+        order_slots = np.empty(S, dtype=np.int64)
+        order_slots[:Me] = slots[order_dense]
+        order_slots[Me:] = np.setdiff1d(
+            np.arange(S, dtype=np.int64), slots, assume_unique=True
+        )
+        alloc_batch = pipe.allocate_stage.allocate_batch_arrays(
+            b, order_slots[None, :]
+        )
+        busy_tabs = busy.tables(now, instance.num_cores)
+        pairs = schedule_batch_arrays(
+            b, alloc_batch,
+            discipline=circuit.discipline, engine=circuit.engine,
+            busy=busy_tabs,
+        )
+        schedules, ccts_slot = pairs[0]  # slot-indexed (S,) CCTs
+        ccts_dense = np.asarray(ccts_slot, dtype=np.float64)[slots]
+        if validate:
+            inst_e = CoflowInstance(
+                demands=residual[act].copy(),
+                weights=result.weights[act].copy(),
+                releases=rel_clamped,
+                rates=rates_by_core.copy(),
+                delta=instance.delta,
+            )
+            dense_of_slot = np.full(S, -1, dtype=np.int64)
+            dense_of_slot[slots] = np.arange(Me, dtype=np.int64)
+            remapped = [
+                CoreSchedule(
+                    coflow=dense_of_slot[cs.coflow], src=cs.src, dst=cs.dst,
+                    size=cs.size, establish=cs.establish,
+                    complete=cs.complete, rate=cs.rate, delta=cs.delta,
+                )
+                for cs in schedules
+            ]
+            validate_schedule(inst_e, remapped)
+
+        calendar = _Calendar.from_schedules(schedules, slot_to_global)
+        last_ccts[act] = ccts_dense
+
+        result.epochs.append(
+            EpochRecord(
+                index=len(result.epochs),
+                time=now,
+                actives=act,
+                admitted=np.asarray(admitted, dtype=np.int64),
+                order=act[order_dense],
+                allocation=None,  # slot-space; see `epochs[...].order`
+                ccts=ccts_dense.copy(),
+                lp=None,
+                warm=is_warm,
+                lp_iters_used=iters_used,
+                lp_wall_s=lp_wall,
+                num_busy=0 if busy_tabs is None else _busy_count(),
+                wall_s=time.perf_counter() - t_epoch,
+                lp_objective=lp_sol_objective,
+            )
+        )
+
+    def _epoch(now: float, admitted: list[int], dirty: np.ndarray) -> None:
+        if resident:
+            _epoch_resident(now, admitted, dirty)
+        else:
+            _epoch_rebuild(now, admitted)
+
+    # --- event loop -------------------------------------------------------
+    for now, ids in _arrival_batches(result.arrival, n_batches, batch_window):
+        dirty = _advance(now)
+        pool.push(ids)
+        admitted = _admit(now)
+        _epoch(now, admitted, dirty)
+
+    while pool.queue:  # pool-bound overflow: admit as slots drain
+        act = pool.active_array()
+        if act.size == 0:
             raise RuntimeError("admission queue stuck with an empty pool")
-        now = min(last_ccts[m] for m in actives)
-        _advance(now)
+        now = float(last_ccts[act].min())
+        dirty = _advance(now)
         admitted = _admit(now)
         if not admitted:
             raise RuntimeError(
                 "drain epoch freed no slot — non-increasing calendar?"
             )
-        _epoch(now, admitted)
+        _epoch(now, admitted, dirty)
 
     # Final calendar runs to completion undisturbed.
-    for m, k, i, j, size, est, comp in incumbent:
-        residual[m, i, j] -= size
-        result.finish[m] = max(result.finish[m], comp)
-    incumbent = []
+    if calendar.m.size:
+        residual[calendar.m, calendar.i, calendar.j] -= calendar.size
+        np.maximum.at(result.finish, calendar.m, calendar.comp)
+        calendar = _Calendar.empty()
     np.maximum(residual, 0.0, out=residual)
-    for m in pool.active_ids():
+    act = pool.active_array()
+    for m in act:
         if residual[m].any():
             raise RuntimeError(
                 f"coflow {m} left {residual[m].sum():g} undelivered demand"
             )
-        finished[m] = True
-        warm.forget(pool.release(m))
+    if act.size:
+        finished[act] = True
+        slots = pool.release_many(act)
+        warm.forget_slots(slots)
+        if resident:
+            free_slots(rpool, slots)
+            slot_to_global[slots] = -1
     if not finished.all():
         missing = np.nonzero(~finished)[0]
         raise RuntimeError(f"coflows never completed: {missing.tolist()}")

@@ -389,3 +389,101 @@ class TestSweepRefineKeying:
                     and r["instance"] == row["instance"]
                 ]
                 assert row["total_weighted_cct"] <= base[0] + TOL
+
+
+# -------------------------------------------------- adaptive stale budgets
+class TestStopAfterStale:
+    """`stop_after_stale=n` freezes an instance only after n CONSECUTIVE
+    non-improving rounds (counter reset on improvement); None keeps the
+    historical freeze-on-first-stale rule.  Both refine paths must apply
+    the same freeze rule, and frozen instances must stop spending
+    evaluations."""
+
+    def _setup(self):
+        instances = _mixed_instances()[:4]
+        orders = [wspt_order(inst) for inst in instances]
+        batch = eb.build_ensemble_batch(instances)
+        return instances, orders, batch
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            as_refine_spec(RefineSpec(stop_after_stale=0))
+        with pytest.raises(ValueError):
+            as_refine_spec({"stop_after_stale": -1})
+        assert as_refine_spec(
+            RefineSpec(stop_after_stale=3)
+        ).stop_after_stale == 3
+        assert as_refine_spec(True).stop_after_stale is None
+
+    def test_refine_key_includes_stale_budget(self):
+        assert refine_key(RefineSpec(stop_after_stale=2)) != refine_key(
+            RefineSpec()
+        )
+
+    @pytest.mark.parametrize("stale", [1, 2, 3, None])
+    def test_batched_matches_sequential_oracle(self, stale):
+        instances, orders, batch = self._setup()
+        spec = RefineSpec(
+            rounds=6, candidates=5, seed=17, stop_after_stale=stale
+        )
+        out = refine_batch_arrays(batch, batch.pad_orders(orders), spec)
+        seq_evals = 0
+        for b, inst in enumerate(instances):
+            M = inst.num_coflows
+            o2, cur, base, _r, e = refine_sequential(
+                orders[b], spec,
+                lambda o, inst=inst: evaluate_order(inst, o),
+            )
+            seq_evals += e
+            assert np.array_equal(out.orders[b, :M], o2), (stale, b)
+            assert out.objective[b] == cur, (stale, b)
+            assert out.base_objective[b] == base, (stale, b)
+        assert out.evaluations == seq_evals
+
+    def test_none_matches_historical_stale_one(self):
+        instances, orders, batch = self._setup()
+        kw = dict(rounds=5, candidates=4, seed=3)
+        a = refine_batch_arrays(
+            batch, batch.pad_orders(orders), RefineSpec(**kw)
+        )
+        b = refine_batch_arrays(
+            batch, batch.pad_orders(orders),
+            RefineSpec(stop_after_stale=1, **kw),
+        )
+        assert np.array_equal(a.orders, b.orders)
+        assert np.array_equal(a.objective, b.objective)
+        assert a.evaluations == b.evaluations
+
+    def test_freeze_shrinks_evaluation_budget(self):
+        instances, orders, batch = self._setup()
+        B = len(instances)
+        kw = dict(rounds=6, candidates=5, seed=17)
+        full_budget = 6 * 5 * B
+        evals = {}
+        for stale in (1, 3):
+            out = refine_batch_arrays(
+                batch, batch.pad_orders(orders),
+                RefineSpec(stop_after_stale=stale, **kw),
+            )
+            evals[stale] = out.evaluations
+        # Freezing stuck instances spends less than the full budget, and
+        # a tighter stale limit never spends more than a looser one.
+        assert evals[1] < full_budget
+        assert evals[1] <= evals[3] <= full_budget
+
+    def test_stale_counter_resets_on_improvement(self):
+        # An instance that improves, stalls once, then improves again
+        # must not freeze under stop_after_stale=2 — equivalently, the
+        # n=2 search can only refine further than n=1, never less.
+        instances, orders, batch = self._setup()
+        kw = dict(rounds=8, candidates=4, seed=5)
+        tight = refine_batch_arrays(
+            batch, batch.pad_orders(orders),
+            RefineSpec(stop_after_stale=1, **kw),
+        )
+        loose = refine_batch_arrays(
+            batch, batch.pad_orders(orders),
+            RefineSpec(stop_after_stale=2, **kw),
+        )
+        assert (loose.objective <= tight.objective + TOL).all()
+        assert loose.evaluations >= tight.evaluations

@@ -145,3 +145,65 @@ class TestDistributed:
         assert json.dumps(merged) == json.dumps(
             json.loads(json.dumps(ref.rows(), default=float))
         )
+
+
+class TestGcBudget:
+    """`run_shard(gc_max_*)` keeps a long-lived cache root bounded.
+
+    Each rep sweeps a fresh spec generation (new seeds -> new cells)
+    against the same cache; without eviction the store would accrete
+    every generation forever.  The post-sweep `SweepCache.gc` pass must
+    hold the manifest AND the object files under the budget after every
+    run, while keeping the just-swept generation hot (a replay computes
+    zero cells)."""
+
+    def _objects_on_disk(self, root):
+        objdir = os.path.join(root, "objects")
+        return sum(
+            len(files) for _, _, files in os.walk(objdir)
+        ) if os.path.isdir(objdir) else 0
+
+    def test_bounded_cache_stays_under_budget(self, tmp_path, monkeypatch):
+        import time
+
+        from repro.experiments.cache import SweepCache
+
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        cache = str(tmp_path / "gc_cache")
+        specs = SPECS[:4]
+        budget = len(specs) * 2  # one generation: 4 cells x 2 schemes
+        for rep in range(3):
+            if rep:
+                # The manifest's LRU clock has 1 s resolution: distinct
+                # ticks per generation make the eviction order exact.
+                time.sleep(1.1)
+            gen = [dict(s, seed=s["seed"] + 1000 * rep) for s in specs]
+            run_shard(gen, _make, cache=cache, gc_max_cells=budget, **_KW)
+            store = SweepCache(cache)
+            assert len(store) <= budget, rep
+            assert self._objects_on_disk(cache) <= budget, rep
+        # The newest generation is MRU and survived its own gc pass.
+        gen = [dict(s, seed=s["seed"] + 2000) for s in specs]
+        res = run_shard(gen, _make, cache=cache, gc_max_cells=budget, **_KW)
+        assert res.cache_stats["computed"] == 0
+
+    def test_byte_budget_evicts(self, tmp_path, monkeypatch):
+        from repro.experiments.cache import SweepCache
+
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        cache = str(tmp_path / "gc_bytes")
+        run_shard(SPECS[:4], _make, cache=cache, **_KW)
+        grown = SweepCache(cache)
+        assert len(grown) == 8
+        # A tiny byte budget must evict down to (at most) one object.
+        run_shard(
+            SPECS[:1], _make, cache=cache, gc_max_bytes=1, **_KW
+        )
+        store = SweepCache(cache)
+        assert len(store) == 0
+        assert self._objects_on_disk(cache) == 0
+
+    def test_gc_ignored_without_cache(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_RESULTS", str(tmp_path))
+        res = run_shard(SPECS[:2], _make, gc_max_cells=1, **_KW)
+        assert res.cache_stats is None

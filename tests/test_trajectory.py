@@ -17,6 +17,7 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)
 
 from benchmarks.micro import (  # noqa: E402
+    SERVICE_KEYS,
     TRAJECTORY_META,
     backend_metadata,
     record_trajectory,
@@ -40,7 +41,7 @@ def test_committed_trajectory_file_passes_schema():
 
 def test_record_trajectory_stamps_metadata(tmp_path):
     path = str(tmp_path / "BENCH_micro.json")
-    record_trajectory({"some_speedup_x": 2.0}, path=path)
+    record_trajectory({"bench": "engines", "some_speedup_x": 2.0}, path=path)
     with open(path) as f:
         doc = json.load(f)
     assert doc["schema"] == "bench-micro-trajectory-v1"
@@ -48,6 +49,27 @@ def test_record_trajectory_stamps_metadata(tmp_path):
     for key in TRAJECTORY_META:
         assert key in entry["stats"]
     assert entry["stats"]["some_speedup_x"] == 2.0
+
+
+def test_record_trajectory_requires_bench_family(tmp_path):
+    path = str(tmp_path / "BENCH_micro.json")
+    with pytest.raises(AssertionError, match="bench"):
+        record_trajectory({"some_speedup_x": 2.0}, path=path)
+
+
+def test_trace_entries_must_carry_service_keys(tmp_path):
+    path = str(tmp_path / "BENCH_micro.json")
+    with pytest.raises(AssertionError, match="service"):
+        record_trajectory({"bench": "trace"}, path=path)
+    # Explicit nulls satisfy the schema (unmeasured, but declared).
+    record_trajectory(
+        {"bench": "trace", **{k: None for k in SERVICE_KEYS}}, path=path
+    )
+    # Any service_* stat drags in the whole key set, bench aside.
+    with pytest.raises(AssertionError, match="service"):
+        record_trajectory(
+            {"bench": "streaming", "service_epochs": 4}, path=path
+        )
 
 
 def test_record_trajectory_rejects_malformed_existing_entry(tmp_path):
